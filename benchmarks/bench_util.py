@@ -1,0 +1,27 @@
+"""Timing helpers for the benchmark harness."""
+import time
+
+import jax
+
+
+def time_jitted(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (us) of a jitted callable with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,46 @@
+"""Microbenchmarks for the S2FP8 numeric layer (paper §5 cost discussion).
+
+Times the jnp reference path (the CPU-executable implementation; the Pallas
+kernels are the TPU target and validate in interpret mode in tests/).
+Derived column reports achieved GB/s — the quantity §5 claims is preserved.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_util import emit, time_jitted
+from repro.core import s2fp8
+from repro.kernels import ref
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for n in [1 << 16, 1 << 20, 1 << 22]:
+        x = jax.random.normal(key, (n,)) * 1e-5
+        f = jax.jit(s2fp8.truncate_value)
+        us = time_jitted(f, x)
+        gbs = n * 4 / (us * 1e-6) / 1e9
+        emit(f"s2fp8_truncate_n{n}", us, f"{gbs:.2f}GB/s")
+
+        fq = jax.jit(lambda v: s2fp8.quantize(v).payload)
+        us = time_jitted(fq, x)
+        emit(f"s2fp8_quantize_n{n}", us, f"{n*4/(us*1e-6)/1e9:.2f}GB/s")
+
+    for m, k, n2 in [(512, 512, 512), (1024, 1024, 1024)]:
+        a = jax.random.normal(key, (m, k)) * 1e-3
+        b = jax.random.normal(key, (k, n2)) * 1e-3
+        pa, aa, ab = ref.s2fp8_quant_ref(a)
+        pb, ba, bb = ref.s2fp8_quant_ref(b)
+        f = jax.jit(ref.s2fp8_matmul_ref)
+        us = time_jitted(f, pa, aa, ab, pb, ba, bb)
+        gflops = 2 * m * k * n2 / (us * 1e-6) / 1e9
+        emit(f"s2fp8_matmul_{m}x{k}x{n2}", us, f"{gflops:.1f}GFLOP/s")
+
+    q = jax.random.normal(key, (1, 4, 1024, 64))
+    kv = jax.random.normal(key, (1, 4, 1024, 64))
+    f = jax.jit(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=True))
+    us = time_jitted(f, q, kv, kv)
+    emit("attention_ref_1k", us, "oracle")
+
+
+if __name__ == "__main__":
+    main()

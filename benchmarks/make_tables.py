@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md tables from benchmarks/results/dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.make_tables [--mesh 16x16] [--tag '']
+"""
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["minicpm_2b", "stablelm_12b", "gemma3_1b", "nemotron_4_340b",
+              "zamba2_1p2b", "deepseek_moe_16b", "kimi_k2_1t_a32b",
+              "chameleon_34b", "falcon_mamba_7b", "whisper_medium"]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load():
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def dryrun_table(res, tag=""):
+    print("| arch | shape | 16x16 | 2x16x16 | bytes/dev (1-pod) | compile s |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            cells = {}
+            for mesh in ["16x16", "2x16x16"]:
+                key = f"{arch}|{shape}|{mesh}|s2fp8" + (f"|{tag}" if tag else "")
+                cells[mesh] = res.get(key)
+            c1, c2 = cells["16x16"], cells["2x16x16"]
+            if c1 is None:
+                continue
+            if c1["status"] == "skipped":
+                print(f"| {arch} | {shape} | skip | skip | — | — |")
+                continue
+            stat = lambda c: "✓" if (c and c["status"] == "ok") else "FAIL"
+            mem = c1.get("memory_analysis", {})
+            bpd = (mem.get("argument_bytes", 0) or 0) + (mem.get("temp_bytes", 0) or 0)
+            print(f"| {arch} | {shape} | {stat(c1)} | {stat(c2)} "
+                  f"| {bpd/2**30:.2f}GiB | {c1.get('compile_s', 0):.0f} |")
+
+
+def roofline_table(res, mesh="16x16", tag=""):
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful/HLO | MFU@roofline |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            key = f"{arch}|{shape}|{mesh}|s2fp8" + (f"|{tag}" if tag else "")
+            rec = res.get(key)
+            if rec is None:
+                continue
+            if rec["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | skip(full-attn) | — | — |")
+                continue
+            if rec["status"] != "ok":
+                print(f"| {arch} | {shape} | FAIL | | | | | |")
+                continue
+            r = rec["roofline"]
+            print(f"| {arch} | {shape} | {fmt_s(r['compute_s'])} "
+                  f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+                  f"| **{r['dominant']}** | {r['useful_flops_frac']:.2f} "
+                  f"| {r['mfu']*100:.2f}% |")
+
+
+def compare(res, arch, shape, mesh, tags):
+    print(f"### {arch} / {shape} / {mesh}")
+    print("| variant | compute | memory | collective | step@roofline | MFU |")
+    print("|---|---|---|---|---|---|")
+    for tag in tags:
+        key = f"{arch}|{shape}|{mesh}|s2fp8" + (f"|{tag}" if tag else "")
+        rec = res.get(key)
+        if not rec or rec["status"] != "ok":
+            print(f"| {tag or 'baseline'} | missing | | | | |")
+            continue
+        r = rec["roofline"]
+        print(f"| {tag or 'baseline'} | {fmt_s(r['compute_s'])} "
+              f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+              f"| {fmt_s(r['step_s'])} | {r['mfu']*100:.2f}% |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--section", default="both",
+                    choices=["both", "dryrun", "roofline"])
+    args = ap.parse_args()
+    res = load()
+    if args.section in ("both", "dryrun"):
+        print("\n## Dry-run matrix\n")
+        dryrun_table(res, args.tag)
+    if args.section in ("both", "roofline"):
+        print(f"\n## Roofline ({args.mesh})\n")
+        roofline_table(res, args.mesh, args.tag)

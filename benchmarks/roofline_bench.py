@@ -1,0 +1,38 @@
+"""Roofline summary from the dry-run sweep (deliverable g).
+
+Reads benchmarks/results/dryrun.json (written by launch/dryrun.py) and
+emits one CSV row per (arch x shape x mesh) cell with the three roofline
+terms, the dominant bottleneck and MFU at roofline.
+"""
+import json
+import os
+
+from benchmarks.bench_util import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def main():
+    if not os.path.exists(RESULTS):
+        emit("roofline_missing", 0.0, "run launch/dryrun.py first")
+        return
+    with open(RESULTS) as f:
+        res = json.load(f)
+    for key in sorted(res):
+        rec = res[key]
+        name = "roofline_" + key.replace("|", "_")
+        if rec["status"] == "skipped":
+            emit(name, 0.0, "skipped:" + rec["reason"][:40].replace(",", ";"))
+            continue
+        if rec["status"] != "ok":
+            emit(name, 0.0, "FAIL")
+            continue
+        r = rec["roofline"]
+        emit(name, r["step_s"] * 1e6,
+             f"dom={r['dominant']};mfu={r['mfu']:.4f};"
+             f"c={r['compute_s']:.3f}s;m={r['memory_s']:.3f}s;"
+             f"n={r['collective_s']:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: train a tiny LM with S2FP8 and watch it track FP32.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.core.policy import make_policy
+from repro.data import synthetic
+from repro.models import transformer as tlm
+from repro.optim import optimizers, schedules
+from repro.training.trainer import make_train_step
+
+STEPS = 60
+cfg = get_reduced_config("minicpm_2b").replace(n_layers=2, remat=False, vocab=64)
+table = synthetic.make_markov_table(0, cfg.vocab)
+
+
+def loss_fn(params, batch, pol):
+    return tlm.loss_fn(params, batch["tokens"], batch["labels"], cfg, pol)
+
+
+def run(mode):
+    pol = make_policy(mode, loss_scale=100.0)
+    params = tlm.init_lm(cfg, jax.random.PRNGKey(0))
+    opt = optimizers.adamw()
+    step = jax.jit(make_train_step(loss_fn, opt, schedules.constant(3e-3), pol))
+    state = opt.init(params)
+    losses = []
+    for s in range(STEPS):
+        batch = synthetic.lm_batch(0, s, 8, 64, cfg.vocab, table)
+        params, state, m = step(params, state, batch, jnp.int32(s))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+if __name__ == "__main__":
+    print(f"{'step':>6} {'fp32':>8} {'s2fp8':>8} {'fp8':>8}")
+    curves = {m: run(m) for m in ["fp32", "s2fp8", "fp8"]}
+    for s in range(0, STEPS, 10):
+        print(f"{s:6d} {curves['fp32'][s]:8.4f} {curves['s2fp8'][s]:8.4f} "
+              f"{curves['fp8'][s]:8.4f}")
+    print(f"{'final':>6} {curves['fp32'][-1]:8.4f} {curves['s2fp8'][-1]:8.4f} "
+          f"{curves['fp8'][-1]:8.4f}")
+    print("\nS2FP8 tracks FP32 out-of-the-box; raw FP8 does not (paper's claim).")

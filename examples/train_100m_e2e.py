@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~134M-param LM for a few hundred steps with
+S2FP8, checkpointing + auto-resume, on whatever devices exist.
+
+    PYTHONPATH=src python examples/train_100m_e2e.py --steps 300
+
+This is the deliverable-(b) driver: full stack (config -> model -> policy ->
+optimizer/schedule -> data pipeline -> TrainLoop with watchdog/checkpoints).
+"""
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.policy import make_policy
+from repro.data import synthetic
+from repro.models import transformer as tlm
+from repro.optim import optimizers, schedules
+from repro.training.trainer import TrainLoop, make_train_step
+
+CFG = ArchConfig(
+    name="lm-134m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, kv_heads=4, d_ff=2048,
+    vocab=32_000, head_dim=64, activation="silu_glu", tie_embeddings=True,
+    remat=False, attn_impl="flash",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--policy", default="s2fp8")
+    ap.add_argument("--ckpt-dir", default="/tmp/ckpt_100m")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n_params = CFG.n_params()
+    print(f"[e2e] {CFG.name}: {n_params/1e6:.0f}M params, policy={args.policy}")
+
+    pol = make_policy(args.policy)
+    params = tlm.init_lm(CFG, jax.random.PRNGKey(args.seed))
+    opt = optimizers.adamw(weight_decay=0.01)
+    sched = schedules.cosine(3e-4 * 8, warmup=20, total=args.steps)
+
+    def loss_fn(p, batch, pol_):
+        return tlm.loss_fn(p, batch["tokens"], batch["labels"], CFG, pol_)
+
+    step_fn = make_train_step(loss_fn, opt, sched, pol, track_stats=False)
+    table = synthetic.make_markov_table(args.seed, CFG.vocab)
+
+    def data_fn(s):
+        return synthetic.lm_batch(args.seed, s, args.batch, args.seq,
+                                  CFG.vocab, table)
+
+    ck = CheckpointManager(args.ckpt_dir, keep=2)
+    loop = TrainLoop(step_fn, params, opt.init(params), data_fn,
+                     ckpt_manager=ck, ckpt_every=100, log_every=10)
+    loop.maybe_resume()
+    hist = loop.run(args.steps)
+    first = hist[0]["loss"] if loop.start_step == 0 else float("nan")
+    print(f"[e2e] done: start-loss {first if first == first else 'resumed'}"
+          f" final-loss {hist[-1]['loss']:.4f} over {len(hist)} steps "
+          f"(ln V = {math.log(CFG.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 1 (mechanism): ResNet-20 / CIFAR-shape task across formats.
+
+FP32 vs S2FP8 vs FP8 vs FP8+LS(100), SGD momentum 0.9 + step decay — the
+paper's §4.2 recipe at synthetic-data scale (DESIGN.md §6).
+
+    PYTHONPATH=src python examples/train_resnet_cifar.py --steps 80
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import make_policy
+from repro.data import synthetic
+from repro.models import resnet
+from repro.optim import optimizers, schedules
+
+
+def run(mode, steps, depth=20, batch=16, seed=0, loss_scale=100.0):
+    pol = make_policy(mode, loss_scale=loss_scale)
+    params, bn_state = resnet.init_resnet(jax.random.PRNGKey(seed), depth)
+    opt = optimizers.sgd_momentum(momentum=0.9, weight_decay=1e-4)
+    sched = schedules.step_decay(0.05, [int(steps * 0.6), int(steps * 0.85)])
+    scale = loss_scale if mode == "fp8_ls" else 1.0
+
+    @jax.jit
+    def step(params, bn_state, opt_state, batch_, s):
+        def lf(p):
+            loss, (metrics, new_bn) = resnet.loss_fn(p, bn_state, batch_, pol)
+            return loss * scale, (metrics, new_bn)
+
+        (loss, (metrics, new_bn)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if scale != 1.0:
+            grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
+        new_params, new_opt = opt.update(grads, opt_state, params, sched(s))
+        return new_params, new_bn, new_opt, metrics
+
+    opt_state = opt.init(params)
+    accs, losses = [], []
+    for s in range(steps):
+        b = synthetic.cifar_batch(seed, s, batch)
+        params, bn_state, opt_state, m = step(params, bn_state, opt_state,
+                                              b, jnp.int32(s))
+        losses.append(float(m["nll"]))
+        accs.append(float(m["acc"]))
+    tail = max(1, len(accs) // 10)
+    return sum(accs[-tail:]) / tail, losses[-1]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+    print(f"{'format':>12} {'final_acc':>10} {'final_loss':>11}")
+    for mode in ["fp32", "s2fp8", "fp8", "fp8_ls"]:
+        acc, loss = run(mode, args.steps)
+        label = "fp8_ls(100)" if mode == "fp8_ls" else mode
+        print(f"{label:>12} {acc:10.3f} {loss:11.4f}")

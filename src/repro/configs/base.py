@@ -1,0 +1,207 @@
+"""Architecture / run configuration schema + registry.
+
+Every assigned architecture is a module in this package defining ``CONFIG``
+(exact published numbers) built on :class:`ArchConfig`.  ``reduced()`` gives
+the CPU-smoke variant of the same family.  ``--arch <id>`` in the launchers
+resolves through :func:`get_config`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block types that can appear in a layer pattern:
+#   "dense"  : GQA attention + dense MLP
+#   "local"  : sliding-window GQA attention + dense MLP
+#   "moe"    : GQA attention + MoE MLP (shared + routed experts)
+#   "mamba1" : Mamba-1 selective-SSM block
+#   "mamba2" : Mamba-2 (SSD, multi-head scalar-decay) block
+#   "attn"   : attention-only block (Zamba2 shared attention)
+# ---------------------------------------------------------------------------
+BLOCK_TYPES = ("dense", "local", "moe", "mamba1", "mamba2", "attn")
+
+ARCH_IDS = (
+    "minicpm_2b", "stablelm_12b", "gemma3_1b", "nemotron_4_340b",
+    "zamba2_1p2b", "deepseek_moe_16b", "kimi_k2_1t_a32b", "chameleon_34b",
+    "falcon_mamba_7b", "whisper_medium",
+    # paper-reproduction models
+    "transformer_tiny", "resnet20_cifar", "ncf_ml1m",
+)
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+SHAPE_SPECS = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    expert_d_ff: int = 0
+    first_dense_layers: int = 0
+    dense_d_ff: int = 0              # d_ff of the first dense layer(s)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01  # load-balancing loss weight
+    # "global"  — route over all tokens (baseline; the token gather crosses
+    #             data shards -> all-gather of activations)
+    # "grouped" — route within each batch row; gathers stay data-local and
+    #             only the (much smaller) dispatched xe crosses the expert
+    #             axis (hillclimb for the collective-bound MoE cells)
+    routing: str = "global"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state: int = 16
+    expand: int = 2
+    conv_kernel: int = 4
+    dt_rank: int = 0                 # mamba1; 0 -> d_model // 16
+    head_dim: int = 64               # mamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio | mlp | conv
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    activation: str = "silu_glu"     # silu_glu | gelu_glu | gelu | sq_relu
+    norm: str = "rms"                # rms | ln
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    pattern: Tuple[str, ...] = ()    # () -> ("dense",) * n_layers
+    window: int = 0                  # sliding window for "local" blocks
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder (whisper): n_layers counts DECODER layers.
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: str = "none"           # none | audio_stub | vq_stub
+    # numerics / memory
+    activation_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    # attention autodiff schedule for long sequences:
+    #   "naive" — chunked scan, linearized residuals (paper-era baseline)
+    #   "flash" — custom-VJP recompute backward (hillclimb #1, models/flash.py)
+    attn_impl: str = "naive"
+    # SSM scan schedule:
+    #   "step"    — one lax.scan iteration per timestep (baseline; HBM-bound:
+    #               the state round-trips HBM every step)
+    #   "unroll8" — 8 timesteps per scan body; state stays in registers/VMEM
+    #               within a body (mamba1 hillclimb)
+    #   "ssd"     — chunked SSD block decomposition (mamba2 hillclimb:
+    #               intra-chunk work becomes MXU matmuls, state traffic /T)
+    ssm_impl: str = "step"
+    # schedule hint (minicpm uses WSD)
+    schedule: str = "cosine"
+    # which assigned shapes run; others map to a skip reason string
+    skip_shapes: Tuple[Tuple[str, str], ...] = ()
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def resolved_pattern(self) -> Tuple[str, ...]:
+        return self.pattern or ("dense",) * self.n_layers
+
+    @property
+    def sub_quadratic(self) -> bool:
+        p = set(self.resolved_pattern)
+        return bool(p & {"mamba1", "mamba2"}) or (p <= {"local", "dense"} and "local" in p)
+
+    def skip_reason(self, shape: str) -> Optional[str]:
+        for s, reason in self.skip_shapes:
+            if s == shape:
+                return reason
+        return None
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        d, ff, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        q = self.n_heads * hd
+        kvd = self.kv_heads * hd
+        glu = self.activation.endswith("_glu")
+
+        def attn_p():
+            return d * q + 2 * d * kvd + q * d
+
+        def mlp_p(f):
+            return d * f * (3 if glu else 2)
+
+        total = 0
+        for blk in self.resolved_pattern:
+            if blk in ("dense", "local"):
+                total += attn_p() + mlp_p(ff)
+            elif blk == "attn":
+                total += attn_p() + mlp_p(ff)
+            elif blk == "moe":
+                m = self.moe
+                routed = m.n_experts * mlp_p(m.expert_d_ff)
+                shared = m.n_shared * mlp_p(m.expert_d_ff)
+                total += attn_p() + routed + shared + d * m.n_experts
+            elif blk == "mamba1":
+                s = self.ssm
+                di = s.expand * d
+                dtr = s.dt_rank or d // 16
+                total += d * 2 * di + di * s.conv_kernel + di * (dtr + 2 * s.state) \
+                    + dtr * di + di * s.state + di * d
+            elif blk == "mamba2":
+                s = self.ssm
+                di = s.expand * d
+                nh = di // s.head_dim
+                total += d * (2 * di + 2 * s.state * 1 + nh) + di * s.conv_kernel + di * d
+        if self.moe and self.moe.first_dense_layers:
+            # pattern already encodes dense first layers with dense_d_ff
+            pass
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.enc_dec:
+            enc = self.n_enc_layers * (attn_p() + mlp_p(ff))
+            dec_cross = self.n_layers * attn_p()   # cross-attention stacks
+            total += enc + dec_cross
+        return total
+
+    def n_active_params(self) -> int:
+        """Active (per-token) params — differs from n_params for MoE."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        glu = self.activation.endswith("_glu")
+        m = self.moe
+        per_expert = d * m.expert_d_ff * (3 if glu else 2)
+        inactive = (m.n_experts - m.top_k) * per_expert * \
+            sum(1 for b in self.resolved_pattern if b == "moe")
+        return self.n_params() - inactive
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.reduced()

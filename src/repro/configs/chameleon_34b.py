@@ -1,0 +1,20 @@
+"""Chameleon-34B [arXiv:2405.09818] — early-fusion VLM, VQ image tokens.
+
+The modality frontend is a STUB per the assignment: images arrive as VQ
+codebook token ids inside the shared 65536 vocab, so the backbone is a dense
+decoder LM over mixed text+image token streams (``input_specs`` emits the
+mixed ids directly).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, kv_heads=8, d_ff=22016,
+    vocab=65536, head_dim=128, activation="silu_glu", frontend="vq_stub",
+    skip_shapes=(("long_500k", "skip(full-attn)"),),
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.replace(n_layers=4, d_model=128, n_heads=8, kv_heads=2,
+                          head_dim=16, d_ff=256, vocab=512)

@@ -1,0 +1,86 @@
+"""S2FP8-compressed data-parallel gradient synchronization (beyond-paper).
+
+The paper never discusses distribution; this extends its format to the DP
+gradient all-reduce, which at pod scale is ICI-bound.  Key numerics fact:
+S2FP8 is a *nonlinear* code (log-domain affine), so summation does NOT
+commute with encoding — you cannot all-reduce payloads directly.  We
+therefore split the all-reduce into its two data-movement-asymmetric legs:
+
+    all_reduce(g)  ==  all_gather(reduce_scatter(g))
+
+  * reduce-scatter leg: arithmetic — runs in bf16 (additive-safe, 2 bytes/elt)
+  * all-gather leg: pure data movement — each device S2FP8-encodes its
+    *reduced* shard (1 byte/elt + 8 bytes stats) and gathers payloads.
+
+ICI bytes per element: f32 all-reduce ~ 2*(n-1)/n * 4B; compressed version
+~ (n-1)/n * (2B + 1B) — a ~2.7x traffic cut with the paper's own format
+carrying the gather leg.  Implemented with shard_map + lax collectives so
+the schedule is explicit and inspectable in HLO (tests/test_collectives.py
+verifies numerics; the dry-run roofline counts the bytes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import fp8, s2fp8
+
+
+def _encode_local(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-shard S2FP8 encode (stats are per-shard — still one (a,b) pair
+    per tensor-shard, 8 bytes against megabytes of payload)."""
+    alpha, beta = s2fp8.compute_stats(x)
+    y = s2fp8._forward_map(x.astype(jnp.float32), alpha, beta)
+    return fp8.cast_e5m2(y), alpha, beta
+
+
+def _decode_local(payload, alpha, beta) -> jnp.ndarray:
+    return s2fp8._inverse_map(payload.astype(jnp.float32), alpha, beta)
+
+
+def compressed_allreduce_1d(g: jnp.ndarray, mesh: Mesh, axis: str = "data"):
+    """All-reduce a replicated-per-shard gradient across ``axis`` with an
+    S2FP8-compressed all-gather leg.  g must be 1-D with len % axis_size == 0
+    (caller flattens/pads; see ``compressed_grad_sync``)."""
+    n = mesh.shape[axis]
+
+    def body(gl):
+        # gl: the local copy [L]. reduce_scatter in bf16.
+        red = jax.lax.psum_scatter(gl.astype(jnp.bfloat16), axis,
+                                   scatter_dimension=0, tiled=True)
+        payload, alpha, beta = _encode_local(red.astype(jnp.float32))
+        payloads = jax.lax.all_gather(payload, axis, tiled=True)
+        alphas = jax.lax.all_gather(alpha[None], axis)
+        betas = jax.lax.all_gather(beta[None], axis)
+        shard_len = gl.shape[0] // n
+        chunks = payloads.reshape(n, shard_len)
+        dec = jax.vmap(_decode_local)(chunks, alphas[:, 0], betas[:, 0])
+        return dec.reshape(-1)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=P(), out_specs=P(), check_rep=False)(g)
+
+
+def compressed_grad_sync(grads, mesh: Mesh, axis: str = "data",
+                         min_size: int = 1 << 16):
+    """Apply the compressed all-reduce to every leaf >= min_size elements
+    (small leaves go through a plain f32 psum — stats overhead dominates
+    below ~64k elements). Leaves are averaged over ``axis``."""
+    n = mesh.shape[axis]
+
+    def sync_leaf(g):
+        flat = g.reshape(-1).astype(jnp.float32) / n
+        if flat.shape[0] < min_size or flat.shape[0] % n != 0:
+            def plain(x):
+                return jax.lax.psum(x, axis) / n
+            return shard_map(plain, mesh=mesh, in_specs=P(), out_specs=P(),
+                             check_rep=False)(g.astype(jnp.float32)).astype(g.dtype)
+        out = compressed_allreduce_1d(flat * n, mesh, axis) / n
+        return out.reshape(g.shape).astype(g.dtype)
+
+    return jax.tree_util.tree_map(sync_leaf, grads)

@@ -1,0 +1,40 @@
+"""Plain FP8 (1/5/2 a.k.a. e5m2) helpers — the paper's baseline format.
+
+The paper's FP8 is IEEE-style 1 sign / 5 exponent / 2 mantissa with denormals
+and RNE rounding (Table A1): normal range [2^-14, (1-2^-3)*2^16], denormals
+down to 2^-16, machine epsilon 2^-3.  That is bit-identical to ml_dtypes'
+``float8_e5m2``, which JAX exposes as ``jnp.float8_e5m2``; ``astype`` performs
+round-to-nearest-even.
+
+We also expose e4m3 for the mixed-format ablation (not used by the paper).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Format constants (paper Table A1 / Figure A1).
+E5M2_MAX = 57344.0          # (1 - 2**-3) * 2**16
+E5M2_MIN_NORMAL = 2.0 ** -14
+E5M2_MIN_SUBNORMAL = 2.0 ** -16
+E4M3_MAX = 448.0
+
+
+def truncate_e5m2(x: jnp.ndarray) -> jnp.ndarray:
+    """RNE-truncate to FP8 e5m2 and return in the input's float dtype.
+
+    Overflow goes to +-inf in e5m2; the paper's S2FP8 construction guarantees
+    |Y| <= 2^15 so saturation never triggers post-transform, but raw FP8
+    baselines *do* overflow — that divergence is part of the reproduction, so
+    we intentionally do not clamp here.
+    """
+    return x.astype(jnp.float8_e5m2).astype(x.dtype)
+
+
+def truncate_e4m3(x: jnp.ndarray) -> jnp.ndarray:
+    """RNE-truncate to FP8 e4m3 (ablation format)."""
+    return x.astype(jnp.float8_e4m3fn).astype(x.dtype)
+
+
+def cast_e5m2(x: jnp.ndarray) -> jnp.ndarray:
+    """Cast to the 1-byte payload dtype (storage, not simulation)."""
+    return x.astype(jnp.float8_e5m2)

@@ -1,0 +1,125 @@
+"""Numeric policy: how every GEMM/conv in the framework executes.
+
+The paper's Figure 4 dataflow is realized by wrapping each bilinear op's
+operands and result in ``truncate_bidir`` (see core/s2fp8.py).  The policy
+object selects between:
+
+  fp32    — baseline, nothing inserted
+  bf16    — operands cast to bf16, f32 accumulation (paper Table A2 column)
+  fp8     — raw e5m2 truncation around GEMMs (the diverging baseline)
+  fp8_ls  — raw e5m2 + loss scaling lambda (applied in the trainer; the GEMM
+            wrapping here is identical to ``fp8``)
+  s2fp8   — the paper's format (shifted & squeezed truncation)
+
+Models never reference numerics directly — they call ``policy.dot`` /
+``policy.einsum`` / ``policy.conv`` and get the right dataflow, so every
+architecture in configs/ is numerics-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import s2fp8
+
+MODES = ("fp32", "bf16", "fp8", "fp8_ls", "s2fp8", "s2fp8_e4m3")
+
+
+def _identity(x):
+    return x
+
+
+def _bf16_cast(x):
+    # bf16 operand storage, f32 accumulation (preferred_element_type below).
+    return x.astype(jnp.bfloat16)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Numeric execution policy for all bilinear ops in a model."""
+
+    mode: str = "fp32"
+    # Truncate the GEMM output as well as the operands (paper: "before and
+    # after every convolution and matrix-matrix product").
+    truncate_output: bool = True
+    # Loss scale for fp8_ls (consumed by the trainer; kept here so configs
+    # carry one self-contained numerics description).
+    loss_scale: float = 1.0
+    # GEMM output dtype. None -> f32 (paper-strict: every partial sum in
+    # f32, including cross-shard).  "bfloat16" rounds the MXU's f32
+    # accumulator to bf16 at the GEMM boundary — within-GEMM accumulation
+    # stays f32 (the paper's actual requirement) but TP partial-sum
+    # all-reduces then move half the bytes (hillclimb lever; EXPERIMENTS.md
+    # §Perf documents the trade).
+    output_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown numeric mode {self.mode!r}; want one of {MODES}")
+
+    # -- operand / output transforms ------------------------------------
+    @property
+    def _wrap(self) -> Callable:
+        if self.mode == "s2fp8":
+            return s2fp8.truncate_bidir
+        if self.mode == "s2fp8_e4m3":
+            return s2fp8.truncate_bidir_e4m3
+        if self.mode in ("fp8", "fp8_ls"):
+            return s2fp8.fp8_truncate_bidir
+        if self.mode == "bf16":
+            return _bf16_cast
+        return _identity
+
+    @property
+    def accum_dtype(self):
+        if self.output_dtype == "bfloat16":
+            return jnp.bfloat16
+        return jnp.float32
+
+    def truncate(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Tensor-level truncation at op boundaries (bidirectional: the
+        cotangent is truncated too for fp8/s2fp8 modes)."""
+        return self._wrap(x)
+
+    def _wrap_out(self, y):
+        if self.truncate_output and self.mode in ("s2fp8", "s2fp8_e4m3", "fp8", "fp8_ls"):
+            return self._wrap(y)
+        return y
+
+    # -- bilinear ops -----------------------------------------------------
+    def dot(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        w = self._wrap
+        y = jnp.dot(w(a), w(b), preferred_element_type=self.accum_dtype)
+        return self._wrap_out(y).astype(a.dtype)
+
+    def dot_general(self, a, b, dimension_numbers) -> jnp.ndarray:
+        w = self._wrap
+        y = jax.lax.dot_general(
+            w(a), w(b), dimension_numbers, preferred_element_type=self.accum_dtype
+        )
+        return self._wrap_out(y).astype(a.dtype)
+
+    def einsum(self, spec: str, *operands) -> jnp.ndarray:
+        w = self._wrap
+        y = jnp.einsum(
+            spec, *[w(o) for o in operands], preferred_element_type=self.accum_dtype
+        )
+        return self._wrap_out(y).astype(operands[0].dtype)
+
+    def conv(self, x, kernel, *, stride=(1, 1), padding="SAME") -> jnp.ndarray:
+        """NHWC x HWIO conv — the ResNet path (conv is a GEMM to the paper)."""
+        w = self._wrap
+        y = jax.lax.conv_general_dilated(
+            w(x), w(kernel),
+            window_strides=stride, padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=self.accum_dtype,
+        )
+        return self._wrap_out(y).astype(x.dtype)
+
+
+def make_policy(mode: str, loss_scale: Optional[float] = None) -> Policy:
+    return Policy(mode=mode, loss_scale=loss_scale if loss_scale is not None else 1.0)

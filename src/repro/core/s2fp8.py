@@ -1,0 +1,257 @@
+"""S2FP8 — Shifted & Squeezed FP8 (Cambier et al., ICLR 2020), Eq. 1–5.
+
+A tensor ``X`` is represented by an e5m2 payload ``Y`` plus two FP32
+statistics ``alpha`` (squeeze) and ``beta`` (shift) such that
+
+    log2|Y_i| = alpha * log2|X_i| + beta,      sign(Y_i) = sign(X_i)
+
+with (paper Eq. 2–4, over the nonzero elements)
+
+    mu    = mean_i log2|X_i|
+    m     = max_i  log2|X_i|
+    alpha = 15 / (m - mu)
+    beta  = -alpha * mu
+
+so that log2|Y| has zero mean and max exactly 15 — centered in FP8's
+[2^-16, 2^16] window.  The training-simulation truncation (paper Eq. 5) is
+
+    T(X) = sign(X) * ( 2^{-beta} * truncate_FP8( 2^{beta} |X|^{alpha} ) )^{1/alpha}
+
+All transforms are computed in the log2 domain (exact exponent arithmetic,
+no overflow: the forward log-image is <= 15 by construction).
+
+Three layers of API:
+
+* ``compute_stats`` / ``quantize`` / ``dequantize`` — the storage format
+  (``S2FP8Tensor`` pytree: 1 byte/elt payload + 2 scalars).  Used for
+  checkpoint compression and compressed collectives.
+* ``truncate`` — Eq. 5 value simulation with configurable gradient behaviour
+  (straight-through, or truncating the cotangent as well).
+* ``quantized_dot`` semantics are composed in ``core/policy.py`` by placing
+  bidirectional truncations around GEMM operands and results, which yields
+  exactly the paper's Figure 4 dataflow for *any* bilinear op (dot, conv,
+  einsum) without bespoke custom_vjp per op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fp8
+
+# Max log2 magnitude the transformed tensor is pinned to (paper Eq. 2).
+TARGET_MAX_LOG2 = 15.0
+# e4m3 variant (paper §6 future work: "broader suite of low precision
+# formats"): e4m3 max normal is 448 ~= 2^8.8 — pin the transformed max at
+# 2^8 to stay clear of saturation, trading dynamic range for the extra
+# mantissa bit (eps 2^-4 vs e5m2's 2^-3).
+TARGET_MAX_LOG2_E4M3 = 8.0
+# Guard for degenerate tensors where max(log2|X|) == mean(log2|X|)
+# (constant-magnitude tensors): fall back to a pure shift (alpha = 1).
+_DEGENERATE_EPS = 1e-6
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class S2FP8Tensor:
+    """Storage representation: e5m2 payload + (alpha, beta) statistics."""
+
+    payload: jnp.ndarray        # float8_e5m2, same shape as the source
+    alpha: jnp.ndarray          # f32 scalar (squeeze)
+    beta: jnp.ndarray           # f32 scalar (shift)
+
+    @property
+    def shape(self):
+        return self.payload.shape
+
+    @property
+    def nbytes_payload(self) -> int:
+        import numpy as np
+        return int(np.prod(self.payload.shape)) + 8
+
+    def tree_flatten(self):
+        return (self.payload, self.alpha, self.beta), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def compute_stats(x: jnp.ndarray,
+                  target_max: float = TARGET_MAX_LOG2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (alpha, beta) per paper Eq. 3–4, ignoring zero elements.
+
+    Degenerate cases:
+      * all-zero tensor      -> identity transform (alpha=1, beta=0)
+      * constant |X| (m==mu) -> pure shift pinning the max at 2^target_max
+    """
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    nonzero = absx > 0.0
+    logx = jnp.where(nonzero, jnp.log2(jnp.where(nonzero, absx, 1.0)), 0.0)
+    count = jnp.sum(nonzero)
+    safe_count = jnp.maximum(count, 1)
+    mu = jnp.sum(logx) / safe_count
+    m = jnp.max(jnp.where(nonzero, logx, -jnp.inf))
+
+    spread = m - mu
+    degenerate = spread < _DEGENERATE_EPS
+    alpha = jnp.where(degenerate, 1.0, target_max / jnp.where(degenerate, 1.0, spread))
+    beta = jnp.where(degenerate, target_max - m, -alpha * mu)
+
+    # All-zero tensor: identity (payload stays all-zero either way).
+    empty = count == 0
+    alpha = jnp.where(empty, 1.0, alpha)
+    beta = jnp.where(empty, 0.0, beta)
+    return alpha.astype(jnp.float32), beta.astype(jnp.float32)
+
+
+def _forward_map(x: jnp.ndarray, alpha, beta) -> jnp.ndarray:
+    """Y = sign(X) * 2^{alpha*log2|X| + beta}, zeros preserved (f32)."""
+    absx = jnp.abs(x)
+    nonzero = absx > 0.0
+    ylog = alpha * jnp.log2(jnp.where(nonzero, absx, 1.0)) + beta
+    y = jnp.sign(x) * jnp.exp2(ylog)
+    return jnp.where(nonzero, y, 0.0).astype(jnp.float32)
+
+
+def _inverse_map(y: jnp.ndarray, alpha, beta) -> jnp.ndarray:
+    """X = sign(Y) * 2^{(log2|Y| - beta)/alpha}, zeros preserved (f32)."""
+    y = y.astype(jnp.float32)
+    absy = jnp.abs(y)
+    nonzero = absy > 0.0
+    xlog = (jnp.log2(jnp.where(nonzero, absy, 1.0)) - beta) / alpha
+    x = jnp.sign(y) * jnp.exp2(xlog)
+    return jnp.where(nonzero, x, 0.0)
+
+
+def quantize(x: jnp.ndarray) -> S2FP8Tensor:
+    """FP32/bf16 tensor -> S2FP8 storage (payload + stats)."""
+    alpha, beta = compute_stats(x)
+    y = _forward_map(x.astype(jnp.float32), alpha, beta)
+    return S2FP8Tensor(payload=fp8.cast_e5m2(y), alpha=alpha, beta=beta)
+
+
+def dequantize(t: S2FP8Tensor, dtype=jnp.float32) -> jnp.ndarray:
+    """S2FP8 storage -> dense tensor."""
+    return _inverse_map(t.payload.astype(jnp.float32), t.alpha, t.beta).astype(dtype)
+
+
+def truncate_value(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 5: the pure value semantics of the S2FP8 round-trip."""
+    alpha, beta = compute_stats(x)
+    y = _forward_map(x.astype(jnp.float32), alpha, beta)
+    yq = fp8.truncate_e5m2(y)
+    return _inverse_map(yq, alpha, beta).astype(x.dtype)
+
+
+def truncate_value_e4m3(x: jnp.ndarray) -> jnp.ndarray:
+    """S2FP8-e4m3 ablation (paper §6 future work): one more mantissa bit
+    (eps 2^-4), range pinned at 2^8 — for narrow-distribution tensors the
+    squeeze absorbs the range loss and precision improves ~2x."""
+    alpha, beta = compute_stats(x, target_max=TARGET_MAX_LOG2_E4M3)
+    y = _forward_map(x.astype(jnp.float32), alpha, beta)
+    yq = fp8.truncate_e4m3(y)
+    return _inverse_map(yq, alpha, beta).astype(x.dtype)
+
+
+@jax.custom_vjp
+def truncate_bidir_e4m3(x):
+    return truncate_value_e4m3(x)
+
+
+def _bidir_e4m3_fwd(x):
+    return truncate_value_e4m3(x), None
+
+
+def _bidir_e4m3_bwd(_, g):
+    return (truncate_value_e4m3(g),)
+
+
+truncate_bidir_e4m3.defvjp(_bidir_e4m3_fwd, _bidir_e4m3_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable truncations.
+#
+# ``truncate_ste``      : T on the forward value, identity on the cotangent.
+# ``truncate_bidir``    : T on the forward value AND T on the cotangent.
+#
+# Placing ``truncate_bidir`` on each GEMM operand and on the GEMM output
+# reproduces the paper's Figure 4 exactly: forward GEMM sees truncated
+# A, W and its stored output is truncated; backward GEMMs consume a truncated
+# dY (the output-T's cotangent rule) and emit truncated dX / dW (the
+# operand-Ts' cotangent rules).  Master weights stay FP32 in the optimizer.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def truncate_ste(x):
+    return truncate_value(x)
+
+
+def _ste_fwd(x):
+    return truncate_value(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+truncate_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+@jax.custom_vjp
+def truncate_bidir(x):
+    return truncate_value(x)
+
+
+def _bidir_fwd(x):
+    return truncate_value(x), None
+
+
+def _bidir_bwd(_, g):
+    return (truncate_value(g),)
+
+
+truncate_bidir.defvjp(_bidir_fwd, _bidir_bwd)
+
+
+# Plain-FP8 analogues (the paper's baseline): raw e5m2 RNE truncation with
+# the same gradient conventions.  Out-of-range values overflow to inf /
+# underflow to zero — that is the behaviour whose divergence the paper
+# documents, so it is deliberately unguarded.
+
+@jax.custom_vjp
+def fp8_truncate_bidir(x):
+    return fp8.truncate_e5m2(x)
+
+
+def _fp8_fwd(x):
+    return fp8.truncate_e5m2(x), None
+
+
+def _fp8_bwd(_, g):
+    return (fp8.truncate_e5m2(g),)
+
+
+fp8_truncate_bidir.defvjp(_fp8_fwd, _fp8_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Stats tracking (paper Fig. 5): expose (mu, m, alpha, beta) for logging.
+# ---------------------------------------------------------------------------
+
+def tensor_stats(x: jnp.ndarray) -> dict:
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    nonzero = absx > 0.0
+    logx = jnp.where(nonzero, jnp.log2(jnp.where(nonzero, absx, 1.0)), 0.0)
+    count = jnp.maximum(jnp.sum(nonzero), 1)
+    mu = jnp.sum(logx) / count
+    m = jnp.max(jnp.where(nonzero, logx, -jnp.inf))
+    alpha, beta = compute_stats(x)
+    return {"mu": mu, "m": m, "alpha": alpha, "beta": beta}

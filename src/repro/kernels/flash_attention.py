@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (online softmax), causal / sliding-window.
+
+Target kernel for the prefill hot-spot.  Memory-hierarchy reasoning:
+Q/K/V tiles stream HBM->VMEM; the (bq, bk) score tile lives only in
+registers/VMEM (never HBM — this is the flash insight, reexpressed for TPU);
+running max / denominator / output accumulator live in VMEM scratch across
+the sequential kv-grid.  Default tiles (bq, bk) = (512, 512) with d<=256:
+~ (2*512*d*4 + 512*512*4 + 512*d*4) bytes ~= 2.6 MiB for d=128 — fits VMEM
+with double buffering.  MXU dims are multiples of 128.
+
+The masked logit fill is -1e30 (finite) instead of -inf so the online
+rescaling never produces NaN; fully-masked tiles are additionally zeroed
+via the mask on the probability tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MASK_VALUE = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+                  *, sq, sk, bq, bk, causal, window):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _MASK_VALUE)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)              # (bk, d)
+    d = q.shape[-1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / jnp.sqrt(jnp.float32(d)))      # (bq, bk)
+
+    # Position mask. Query rows are aligned to the END of the kv axis so the
+    # same kernel serves self-attention (sq == sk) and chunked decode.
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, _MASK_VALUE)
+
+    m_prev = m_s[:, :1]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)   # (bq, bk)
+    l_new = l_s[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = jnp.broadcast_to(m_new, m_s.shape)
+    l_s[...] = jnp.broadcast_to(l_new, l_s.shape)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        denom = l_s[:, :1]
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0] = (acc_s[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           bq=512, bk=512, interpret: bool = True):
+    """q: [B,H,Sq,D]; k,v: [B,H,Sk,D] (kv heads pre-broadcast). Returns like q."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * h, sk, d)
+    vr = v.reshape(b * h, sk, d)
+    grid = (b * h, sq // bq, sk // bk)
+    kernel = functools.partial(_flash_kernel, sq=sq, sk=sk, bq=bq, bk=bk,
+                               causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

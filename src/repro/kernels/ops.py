@@ -1,0 +1,55 @@
+"""Jit'd public wrappers dispatching between Pallas kernels and jnp refs.
+
+On a real TPU runtime, set ``interpret=False`` (the default flips on TPU
+backends).  In this CPU container the kernels execute via interpret=True —
+same kernel body, Python evaluation — and the refs serve both as oracles
+and as the fast CPU path for large shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.s2fp8_quant import quant_pallas, dequant_pallas, stats_pallas
+from repro.kernels.s2fp8_matmul import s2fp8_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def s2fp8_quant(x: jnp.ndarray, *, use_pallas: bool | None = None):
+    """(payload_e5m2, alpha, beta). x must be 2-D for the kernel path."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas and x.ndim == 2:
+        return quant_pallas(x, interpret=not _on_tpu())
+    return ref.s2fp8_quant_ref(x)
+
+
+def s2fp8_dequant(payload, alpha, beta, *, use_pallas: bool | None = None):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas and payload.ndim == 2:
+        return dequant_pallas(payload, alpha, beta, interpret=not _on_tpu())
+    return ref.s2fp8_dequant_ref(payload, alpha, beta)
+
+
+def s2fp8_matmul(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
+                 *, use_pallas: bool | None = None):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return s2fp8_matmul_pallas(a_payload, a_alpha, a_beta,
+                                   b_payload, b_alpha, b_beta,
+                                   interpret=not _on_tpu())
+    return ref.s2fp8_matmul_ref(a_payload, a_alpha, a_beta,
+                                b_payload, b_alpha, b_beta)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    use_pallas: bool | None = None, bq=512, bk=512):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      bq=bq, bk=bk, interpret=not _on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal, window=window)

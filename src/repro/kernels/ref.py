@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the kernels/tests compare
+against (assert_allclose in tests/test_kernels.py).  No pallas imports.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fp8, s2fp8
+
+
+# --------------------------------------------------------------------------
+# s2fp8_quant: stats + forward map + e5m2 cast
+# --------------------------------------------------------------------------
+
+def s2fp8_quant_ref(x: jnp.ndarray):
+    """Returns (payload_e5m2, alpha, beta) for a 2-D tensor."""
+    t = s2fp8.quantize(x)
+    return t.payload, t.alpha, t.beta
+
+
+def s2fp8_dequant_ref(payload, alpha, beta, dtype=jnp.float32):
+    return s2fp8.dequantize(s2fp8.S2FP8Tensor(payload, alpha, beta), dtype)
+
+
+# --------------------------------------------------------------------------
+# s2fp8_matmul: C = dequant(A) @ dequant(B), f32 accumulation
+# --------------------------------------------------------------------------
+
+def s2fp8_matmul_ref(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta):
+    a = s2fp8_dequant_ref(a_payload, a_alpha, a_beta)
+    b = s2fp8_dequant_ref(b_payload, b_alpha, b_beta)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# selective_scan (Mamba-1 recurrence)
+# --------------------------------------------------------------------------
+
+def selective_scan_ref(x, dt, bmat, cmat, a, d_skip):
+    """x, dt: [B,S,di]; bmat, cmat: [B,S,n]; a: [di,n]; d_skip: [di].
+    Returns (y [B,S,di], h_final [B,di,n]).  Pure lax.scan oracle."""
+    b, s, di = x.shape
+    n = bmat.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[:, :, None] * a)
+        h = h * da + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + d_skip * xt
+        return h, y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+               for v in (x, dt, bmat, cmat))
+    hn, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hn
+
+
+# --------------------------------------------------------------------------
+# flash_attention: causal / full softmax(QK^T/sqrt(d)) V
+# --------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q: [B,H,Sq,D], k/v: [B,H,Sk,D] (kv heads already broadcast). f32 math."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(jnp.float32)
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

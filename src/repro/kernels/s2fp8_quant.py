@@ -1,0 +1,134 @@
+"""Pallas TPU kernels for S2FP8 quantization (stats + apply).
+
+The paper (§5) describes two HW components: (1) a statistics unit computing
+(mu, m) per tensor, (2) an exponent-shift / mantissa-squeeze unit applied
+before the 8-bit truncation.  On TPU these become:
+
+  * ``stats``  — a blocked reduction over the tensor resident in HBM,
+    streamed through VMEM tiles; partials accumulate in a (1,1) VMEM cell
+    across the sequential grid (TPU grid iterations run in order on a core).
+  * ``apply``  — an elementwise VPU map: y = sign(x)*2^(alpha*log2|x|+beta),
+    cast RNE to float8_e5m2 in-register, written back as the 1-byte payload.
+
+Block shapes default to (256, 512): 256*512*4B = 512 KiB per input tile —
+comfortably inside the ~16 MiB v5e VMEM with double-buffering, and the
+lane dim (512) is a multiple of 128 for clean vectorization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 512)
+_NEG_INF = -jnp.inf
+
+
+def _stats_kernel(x_ref, sum_ref, max_ref, cnt_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        sum_ref[0, 0] = 0.0
+        max_ref[0, 0] = _NEG_INF
+        cnt_ref[0, 0] = 0.0
+
+    x = x_ref[...].astype(jnp.float32)
+    absx = jnp.abs(x)
+    nz = absx > 0.0
+    logx = jnp.where(nz, jnp.log2(jnp.where(nz, absx, 1.0)), 0.0)
+    sum_ref[0, 0] += jnp.sum(logx)
+    max_ref[0, 0] = jnp.maximum(max_ref[0, 0], jnp.max(jnp.where(nz, logx, _NEG_INF)))
+    cnt_ref[0, 0] += jnp.sum(nz.astype(jnp.float32))
+
+
+def _apply_kernel(alpha_ref, beta_ref, x_ref, out_ref):
+    alpha = alpha_ref[0, 0]
+    beta = beta_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    absx = jnp.abs(x)
+    nz = absx > 0.0
+    ylog = alpha * jnp.log2(jnp.where(nz, absx, 1.0)) + beta
+    y = jnp.where(nz, jnp.sign(x) * jnp.exp2(ylog), 0.0)
+    out_ref[...] = y.astype(jnp.float8_e5m2)
+
+
+def _dequant_kernel(alpha_ref, beta_ref, y_ref, out_ref):
+    alpha = alpha_ref[0, 0]
+    beta = beta_ref[0, 0]
+    y = y_ref[...].astype(jnp.float32)
+    absy = jnp.abs(y)
+    nz = absy > 0.0
+    xlog = (jnp.log2(jnp.where(nz, absy, 1.0)) - beta) / alpha
+    out_ref[...] = jnp.where(nz, jnp.sign(y) * jnp.exp2(xlog), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def stats_pallas(x: jnp.ndarray, *, block=DEFAULT_BLOCK, interpret: bool = True):
+    """Blocked (sum_log, max_log, count) reduction. x must be 2-D, block-divisible."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (m // bm, n // bn)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    s, mx, c = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[scalar_spec, scalar_spec, scalar_spec],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32)] * 3,
+        interpret=interpret,
+    )(x)
+    return s[0, 0], mx[0, 0], c[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quant_pallas(x: jnp.ndarray, *, block=DEFAULT_BLOCK, interpret: bool = True):
+    """Full S2FP8 quantization: returns (payload_e5m2, alpha, beta)."""
+    from repro.core.s2fp8 import TARGET_MAX_LOG2, _DEGENERATE_EPS
+
+    s, mx, c = stats_pallas(x, block=block, interpret=interpret)
+    mu = s / jnp.maximum(c, 1.0)
+    spread = mx - mu
+    degenerate = spread < _DEGENERATE_EPS
+    alpha = jnp.where(degenerate, 1.0,
+                      TARGET_MAX_LOG2 / jnp.where(degenerate, 1.0, spread))
+    beta = jnp.where(degenerate, TARGET_MAX_LOG2 - mx, -alpha * mu)
+    empty = c == 0
+    alpha = jnp.where(empty, 1.0, alpha)
+    beta = jnp.where(empty, 0.0, beta)
+
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (m // bm, n // bn)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    payload = pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec,
+                  pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        interpret=interpret,
+    )(alpha.reshape(1, 1), beta.reshape(1, 1), x)
+    return payload, alpha, beta
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequant_pallas(payload, alpha, beta, *, block=DEFAULT_BLOCK, interpret: bool = True):
+    """Inverse map back to f32."""
+    m, n = payload.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (m // bm, n // bn)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec,
+                  pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(alpha.reshape(1, 1), beta.reshape(1, 1), payload)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the two lines above run before any other
+import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm_2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results (memory analysis, cost analysis, collective bytes, roofline terms)
+are cached incrementally into benchmarks/results/dryrun.json so the 80-cell
+sweep can run across multiple invocations.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, SHAPE_SPECS, get_config
+from repro.core.policy import make_policy
+from repro.launch import api
+from repro.launch.mesh import make_production_mesh, axis_sizes
+from repro.parallel import sharding as shd
+from repro.roofline import analysis as roofline
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.json")
+
+LM_ARCHS = [a for a in ARCH_IDS if a not in
+            ("resnet20_cifar", "ncf_ml1m", "transformer_tiny")]
+
+
+def _load_results():
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            return json.load(f)
+    return {}
+
+
+def _save_results(res):
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    tmp = RESULTS + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+    os.replace(tmp, RESULTS)
+
+
+def _mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", 0),
+        }
+    except Exception as e:                                   # backend-specific
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, policy_mode: str = "s2fp8",
+             save_hlo: bool = False, overrides: dict | None = None,
+             truncate_output: bool | None = None, tag: str = "",
+             moe_routing: str | None = None, output_dtype: str | None = None):
+    import dataclasses as _dc
+    overrides = dict(overrides) if overrides else {}
+    shard_kv_seq = overrides.pop("_shard_kv_seq", True)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if moe_routing and cfg.moe is not None:
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, routing=moe_routing))
+    reason = cfg.skip_reason(shape)
+    if reason:
+        return {"status": "skipped", "reason": reason}
+    seq, gbs, kind = SHAPE_SPECS[shape]
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = axis_sizes(mesh)
+    chips = mesh.devices.size
+    pol = make_policy(policy_mode)
+    if truncate_output is not None:
+        pol = _dc.replace(pol, truncate_output=truncate_output)
+    if output_dtype:
+        pol = _dc.replace(pol, output_dtype=output_dtype)
+    rules = shd.TRAIN_RULES if kind == "train" else shd.DECODE_RULES
+    if not shard_kv_seq:
+        rules = dict(rules)
+        rules["kv_seq"] = None
+
+    # Serving runs bf16 weights; training keeps FP32 masters (paper Fig. 4).
+    pdtype = jnp.float32 if kind == "train" else jnp.bfloat16
+    pstruct = api.param_struct(cfg, dtype=pdtype)
+    pspecs = api.param_pspecs(cfg, pstruct, sizes)
+    bstruct = api.batch_struct(cfg, shape)
+    bspecs = api.batch_pspecs(bstruct, sizes)
+
+    def shardings(tree_specs):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.time()
+    with mesh, shd.use_rules(rules, sizes):
+        if kind == "train":
+            step_fn, opt = api.make_train_step(cfg, pol)
+            ostruct = jax.eval_shape(opt.init, pstruct)
+            # opt state mirrors params for m/v (ZeRO); step is replicated
+            from repro.optim.optimizers import OptState
+            ospecs = OptState(P(), api.param_pspecs(cfg, ostruct.m, sizes),
+                              None if ostruct.v is None
+                              else api.param_pspecs(cfg, ostruct.v, sizes))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(shardings(pspecs), shardings(ospecs),
+                              shardings(bspecs), None),
+            )
+            lowered = jitted.lower(pstruct, ostruct, bstruct, jnp.int32(0))
+        elif kind == "prefill":
+            step_fn = api.make_prefill_step(cfg, pol)
+            if cfg.enc_dec:
+                jitted = jax.jit(step_fn, in_shardings=(shardings(pspecs),
+                                                        shardings(bspecs)))
+                lowered = jitted.lower(pstruct, bstruct)
+            else:
+                cstruct = api.cache_struct(cfg, shape)
+                cspecs = api.cache_pspecs(cfg, cstruct, sizes)
+                jitted = jax.jit(step_fn, in_shardings=(shardings(pspecs),
+                                                        shardings(bspecs),
+                                                        shardings(cspecs)))
+                lowered = jitted.lower(pstruct, bstruct, cstruct)
+        else:  # decode
+            step_fn = api.make_decode_step(cfg, pol)
+            cstruct = api.cache_struct(cfg, shape)
+            cspecs = api.cache_pspecs(cfg, cstruct, sizes,
+                                      shard_kv_seq=shard_kv_seq)
+            jitted = jax.jit(step_fn, in_shardings=(shardings(pspecs),
+                                                    shardings(bspecs),
+                                                    shardings(cspecs), None))
+            lowered = jitted.lower(pstruct, bstruct, cstruct, jnp.int32(0))
+
+        compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    mem = _mem_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rl = roofline.analyze(arch, shape, mesh_name, chips, cost, hlo,
+                          mem_bytes=float(mem.get("argument_bytes", 0) or 0)
+                          + float(mem.get("temp_bytes", 0) or 0),
+                          model_gflops_total=roofline.model_flops(cfg, shape) / 1e9)
+    rec = {"status": "ok", "compile_s": compile_s, "memory_analysis": mem,
+           "xla_cost_flops_raw": float(cost.get("flops", 0.0)),
+           "xla_cost_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+           "roofline": rl.to_dict(), "policy": policy_mode}
+    if save_hlo:
+        import gzip
+        hdir = os.path.join(os.path.dirname(RESULTS), "hlo")
+        os.makedirs(hdir, exist_ok=True)
+        suffix = f".{tag}" if tag else ""
+        with gzip.open(os.path.join(
+                hdir, f"{arch}.{shape}.{mesh_name}.{policy_mode}{suffix}.txt.gz"),
+                "wt") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default="s2fp8")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--attn-impl", default=None, choices=[None, "naive", "flash"])
+    ap.add_argument("--ssm-impl", default=None,
+                    choices=[None, "step", "unroll8", "ssd"])
+    ap.add_argument("--decode-kv-seq", default=None, choices=[None, "0", "1"],
+                    help="0: replicate KV-cache seq axis (batch-only decode "
+                         "sharding variant)")
+    ap.add_argument("--moe-routing", default=None,
+                    choices=[None, "global", "grouped"])
+    ap.add_argument("--output-dtype", default=None,
+                    choices=[None, "bfloat16"])
+    ap.add_argument("--truncate-output", default=None, choices=[None, "0", "1"])
+    ap.add_argument("--tag", default="", help="suffix for the results key "
+                    "(perf-iteration label, e.g. 'flash')")
+    args = ap.parse_args()
+    overrides = {}
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
+    if args.ssm_impl:
+        overrides["ssm_impl"] = args.ssm_impl
+    if args.decode_kv_seq is not None:
+        overrides["_shard_kv_seq"] = args.decode_kv_seq == "1"
+
+    archs = LM_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    trunc_out = None if args.truncate_output is None else args.truncate_output == "1"
+    results = _load_results()
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                key = f"{arch}|{shape}|{mesh_name}|{args.policy}"
+                if args.tag:
+                    key += f"|{args.tag}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    print(f"[cached] {key}: {results[key]['status']}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, args.policy, args.save_hlo,
+                                   overrides=overrides or None,
+                                   truncate_output=trunc_out, tag=args.tag,
+                                   moe_routing=args.moe_routing,
+                                   output_dtype=args.output_dtype)
+                except Exception as e:
+                    rec = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                results[key] = rec
+                _save_results(results)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok compile={rec['compile_s']:.1f}s "
+                          f"flops/dev={r['hlo_gflops_per_dev']:.1f}G "
+                          f"coll/dev={r['coll_gbytes_per_dev']:.3f}GB "
+                          f"dominant={r['dominant']} mfu={r['mfu']:.3f}")
+                elif rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}")
+                else:
+                    print(f"  FAIL: {rec['error']}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

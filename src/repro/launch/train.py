@@ -1,0 +1,96 @@
+"""Training launcher.
+
+Single host (this container):
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm_2b \
+        --reduced --steps 50 --policy s2fp8 --ckpt-dir /tmp/ckpt --resume auto
+
+Production pod: the same entry point under `jax.distributed.initialize()`
+(one process per host); the mesh flag switches to the 16x16 / 2x16x16
+production meshes and params/opt-state are sharded by the same rule tables
+the dry-run proves out (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, get_reduced_config
+from repro.core.policy import make_policy
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import synthetic
+from repro.launch import api
+from repro.launch.mesh import make_host_mesh, make_production_mesh, axis_sizes
+from repro.optim import optimizers, schedules
+from repro.parallel import sharding as shd
+from repro.training.trainer import TrainLoop, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale smoke/convergence runs)")
+    ap.add_argument("--policy", default="s2fp8",
+                    choices=["fp32", "bf16", "fp8", "fp8_ls", "s2fp8"])
+    ap.add_argument("--loss-scale", type=float, default=100.0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--track-stats", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    pol = make_policy(args.policy, loss_scale=args.loss_scale)
+    key = jax.random.PRNGKey(args.seed)
+
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    sizes = axis_sizes(mesh)
+
+    loss_fn = api.make_loss_fn(cfg)
+    opt = optimizers.adamw(weight_decay=0.01)
+    sched = schedules.make_schedule(
+        cfg.schedule if cfg.schedule == "wsd" else "cosine",
+        args.lr, total_steps=args.steps, warmup=max(args.steps // 20, 1))
+    step_fn = make_train_step(loss_fn, opt, sched, pol,
+                              track_stats=args.track_stats)
+
+    table = synthetic.make_markov_table(args.seed, cfg.vocab) \
+        if not cfg.enc_dec else None
+
+    def data_fn(step):
+        if cfg.enc_dec:
+            b = synthetic.seq2seq_batch(args.seed, step, args.batch,
+                                        args.seq, args.seq, cfg.vocab)
+            return {"enc_inputs": b["enc_tokens"], "dec_tokens": b["dec_tokens"],
+                    "dec_labels": b["dec_labels"]}
+        return synthetic.lm_batch(args.seed, step, args.batch, args.seq,
+                                  cfg.vocab, table)
+
+    with mesh, shd.use_rules(shd.TRAIN_RULES, sizes):
+        params = api.init_params(cfg, key)
+        opt_state = opt.init(params)
+        ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+        loop = TrainLoop(step_fn, params, opt_state, data_fn,
+                         ckpt_manager=ckpt, ckpt_every=args.ckpt_every)
+        if args.resume == "auto" and ckpt is not None and ckpt.latest_step():
+            loop.maybe_resume()
+        history = loop.run(args.steps)
+    final = history[-1] if history else {}
+    print(f"[train] done: final loss {final.get('loss'):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,773 @@
+"""Model building blocks (numerics-agnostic: all GEMMs go through a Policy).
+
+Block types (configs/base.py BLOCK_TYPES):
+  dense / local : pre-norm GQA attention (+ optional sliding window) + MLP
+  moe           : GQA attention + (shared + routed top-k) expert MLP
+  mamba1        : Mamba-1 selective SSM (falcon-mamba)
+  mamba2        : Mamba-2 SSD, multi-head scalar decay (zamba2)
+  attn          : attention-only block with MLP (zamba2 shared block)
+
+Every block exposes:
+  init_block(block_type, cfg, key)   -> params dict
+  block_apply(block_type, params, x, cfg, policy, positions, cache,
+              cache_index, mode)     -> (y, new_cache, aux)
+  init_cache(block_type, cfg, batch, max_len, dtype) -> cache pytree
+
+``mode``: "train" (full-sequence, no cache), "prefill" (full sequence,
+cache returned), "decode" (S==1 against the cache).
+
+Attention avoids materializing repeated KV heads by computing in grouped
+layout [B, KV, G, S, hd]; long sequences use a doubly-chunked (q x kv)
+flash-style lax.scan so HLO size and live memory stay O(chunk^2) — the
+pure-JAX counterpart of kernels/flash_attention.py (which is the TPU target
+for this hot-spot).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import Policy
+from repro.parallel.sharding import shard
+
+_MASK = -1e30
+
+
+# =========================================================================
+# Norms / activations / RoPE
+# =========================================================================
+
+def init_norm(cfg: ArchConfig, dim: int) -> Dict[str, jnp.ndarray]:
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ArchConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+def activate(h_gate, h_lin, activation: str):
+    if activation == "silu_glu":
+        return jax.nn.silu(h_gate) * h_lin
+    if activation == "gelu_glu":
+        return jax.nn.gelu(h_gate) * h_lin
+    if activation == "gelu":
+        return jax.nn.gelu(h_gate)
+    if activation == "sq_relu":           # Nemotron-4 squared ReLU
+        r = jax.nn.relu(h_gate)
+        return r * r
+    raise ValueError(activation)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, hd]; positions: [S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]     # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+# =========================================================================
+# Attention
+# =========================================================================
+
+def _grouped(q, kv_heads):
+    """[B, H, S, d] -> [B, KV, G, S, d]."""
+    b, h, s, d = q.shape
+    return q.reshape(b, kv_heads, h // kv_heads, s, d)
+
+
+def full_attention(q, k, v, *, causal=True, window=None, policy: Policy = None):
+    """q: [B,KV,G,Sq,d]; k,v: [B,KV,Sk,d]. Plain masked softmax attention."""
+    d = q.shape[-1]
+    sq, sk = q.shape[3], k.shape[2]
+    if policy is not None:
+        q, k, v = policy.truncate(q), policy.truncate(k), policy.truncate(v)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, _MASK)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v.astype(jnp.float32))
+    out = out.astype(q.dtype)
+    if policy is not None:
+        out = policy.truncate(out)
+    return out
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None,
+                      q_chunk=1024, kv_chunk=1024, policy: Policy = None):
+    """Flash-style doubly-chunked attention (pure JAX; see module docstring).
+
+    q: [B,KV,G,Sq,d]; k,v: [B,KV,Sk,d].  The S2FP8 policy truncates the
+    q/k/v tensors once (per-tensor statistics, paper-faithful placement)
+    and the output; in-softmax math stays f32.
+    """
+    b, kvh, g, sq, d = q.shape
+    sk = k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    if policy is not None:
+        q, k, v = policy.truncate(q), policy.truncate(k), policy.truncate(v)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    kc = k.reshape(b, kvh, nk, kv_chunk, d)
+    vc = v.reshape(b, kvh, nk, kv_chunk, d)
+    qc = q.reshape(b, kvh, g, nq, q_chunk, d)
+
+    def q_step(iq):
+        qi = jax.lax.dynamic_index_in_dim(qc, iq, axis=3, keepdims=False)
+        qi = qi.astype(jnp.float32)                          # [B,KV,G,cq,d]
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            ki = jax.lax.dynamic_index_in_dim(kc, ik, axis=2, keepdims=False)
+            vi = jax.lax.dynamic_index_in_dim(vc, ik, axis=2, keepdims=False)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, ki.astype(jnp.float32)) * scale
+            qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None] + (sk - sq)
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None, None], s, _MASK)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.where(mask[None, None, None], jnp.exp(s - m_new), 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("bkgqs,bksd->bkgqd",
+                                              p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk, 1), _MASK, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).astype(q.dtype)                     # [B,KV,G,cq,d]
+
+    out = jax.lax.map(q_step, jnp.arange(nq))                # [nq,B,KV,G,cq,d]
+    out = jnp.moveaxis(out, 0, 3).reshape(b, kvh, g, sq, d)
+    if policy is not None:
+        out = policy.truncate(out)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, valid, *, policy: Policy = None):
+    """One-token attention vs. a cache.  q: [B,KV,G,1,d]; caches [B,KV,Smax,d].
+
+    ``valid``: bool [Smax] mask of live cache slots (computed by the caller —
+    linear fill for full caches, ring occupancy for sliding-window caches).
+    The KV-cache seq axis may be sharded ("kv_seq") — the contraction +
+    softmax reductions then lower to partial-softmax collectives under GSPMD.
+    """
+    d = q.shape[-1]
+    if policy is not None:
+        q = policy.truncate(q)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / math.sqrt(d)
+    logits = jnp.where(valid[None, None, None, None], logits, _MASK)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v_cache.astype(jnp.float32))
+    out = out.astype(q.dtype)
+    if policy is not None:
+        out = policy.truncate(out)
+    return out
+
+
+# =========================================================================
+# MLP / MoE
+# =========================================================================
+
+def init_mlp(cfg: ArchConfig, key, d_in: int, d_ff: int) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    glu = cfg.activation.endswith("_glu")
+    std_in = 1.0 / math.sqrt(d_in)
+    std_ff = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_gate": jax.random.normal(k1, (d_in, d_ff), jnp.float32) * std_in,
+        "w_down": jax.random.normal(k2, (d_ff, d_in), jnp.float32) * std_ff,
+    }
+    if glu:
+        p["w_up"] = jax.random.normal(k3, (d_in, d_ff), jnp.float32) * std_in
+    return p
+
+
+def mlp_fwd(p, x, cfg: ArchConfig, pol: Policy):
+    glu = cfg.activation.endswith("_glu")
+    hg = pol.dot(x, p["w_gate"].astype(x.dtype))
+    hl = pol.dot(x, p["w_up"].astype(x.dtype)) if glu else None
+    h = activate(hg, hl, cfg.activation)
+    h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
+    return pol.dot(h, p["w_down"].astype(x.dtype))
+
+
+def init_moe(cfg: ArchConfig, key) -> Dict[str, jnp.ndarray]:
+    m = cfg.moe
+    d, f = cfg.d_model, m.expert_d_ff
+    glu = cfg.activation.endswith("_glu")
+    keys = jax.random.split(key, 6)
+    std_d, std_f = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": jax.random.normal(keys[0], (d, m.n_experts), jnp.float32) * std_d,
+        "we_gate": jax.random.normal(keys[1], (m.n_experts, d, f), jnp.float32) * std_d,
+        "we_down": jax.random.normal(keys[2], (m.n_experts, f, d), jnp.float32) * std_f,
+    }
+    if glu:
+        p["we_up"] = jax.random.normal(keys[3], (m.n_experts, d, f), jnp.float32) * std_d
+    if m.n_shared:
+        # shared experts fused into one dense MLP of width n_shared * f
+        p["shared"] = init_mlp(cfg, keys[4], d, m.n_shared * f)
+    return p
+
+
+def moe_fwd(p, x, cfg: ArchConfig, pol: Policy):
+    """Gather-based capacity dispatch (see DESIGN.md §2/§4).
+
+    Token-choice top-k routing; each expert then takes its top-C tokens by
+    routing weight (C = T*k/E * capacity_factor, rounded up to 128).  Dropped
+    tokens fall back to the shared-expert/residual path only.  FLOPs scale
+    with routed compute (k/E), not n_experts — this keeps the roofline's
+    MODEL_FLOPS/HLO_FLOPs ratio honest for the MoE cells.
+    """
+    m = cfg.moe
+    if m.routing == "grouped":
+        return _moe_fwd_grouped(p, x, cfg, pol)
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    glu = cfg.activation.endswith("_glu")
+
+    # Router stays f32 (policy decision, DESIGN.md §5).
+    logits = jnp.dot(xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    gate, idx = jax.lax.top_k(probs, m.top_k)                  # [T, k]
+    aff = jnp.zeros((t, m.n_experts), jnp.float32)
+    aff = aff.at[jnp.arange(t)[:, None], idx].set(gate)        # [T, E]
+
+    cap = int(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
+    cap = max(128, ((cap + 127) // 128) * 128)
+    cap = min(cap, t)
+    w_ec, tok_idx = jax.lax.top_k(aff.T, cap)                  # [E, C]
+
+    xe = jnp.take(xt, tok_idx.reshape(-1), axis=0)
+    xe = xe.reshape(m.n_experts, cap, d)
+    xe = shard(xe, "expert", "batch", None)
+
+    hg = pol.einsum("ecd,edf->ecf", xe, p["we_gate"].astype(xe.dtype))
+    hl = pol.einsum("ecd,edf->ecf", xe, p["we_up"].astype(xe.dtype)) if glu else None
+    h = activate(hg, hl, cfg.activation)
+    h = shard(h, "expert", "batch", None)
+    oe = pol.einsum("ecf,efd->ecd", h, p["we_down"].astype(xe.dtype))
+    oe = oe * w_ec[..., None].astype(oe.dtype)
+
+    out = jnp.zeros((t, d), x.dtype)
+    out = out.at[tok_idx.reshape(-1)].add(oe.reshape(-1, d))
+
+    if m.n_shared:
+        out = out + mlp_fwd(p["shared"], xt, cfg, pol)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e.
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(idx, m.n_experts), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f_e * p_e) * m.router_aux_weight
+    return out.reshape(b, s, d), aux
+
+
+def _moe_fwd_grouped(p, x, cfg: ArchConfig, pol: Policy):
+    """Grouped (per-batch-row) routing: token gathers stay data-local.
+
+    Each batch row routes its own tokens; capacity is per (row, expert).
+    The only cross-shard movement is resharding xe's expert axis onto the
+    model axis — orders of magnitude less traffic than all-gathering the
+    full activation across data shards (see EXPERIMENTS.md §Perf / kimi).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    glu = cfg.activation.endswith("_glu")
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # [B,S,E]
+    gate, idx = jax.lax.top_k(probs, m.top_k)                 # [B,S,k]
+    aff = jnp.zeros((b, s, m.n_experts), jnp.float32)
+    bi = jnp.arange(b)[:, None, None]
+    si = jnp.arange(s)[None, :, None]
+    aff = aff.at[bi, si, idx].set(gate)                       # [B,S,E]
+
+    cap = int(math.ceil(s * m.top_k / m.n_experts * m.capacity_factor))
+    cap = max(16, ((cap + 15) // 16) * 16)
+    cap = min(cap, s)
+    w_ec, tok_idx = jax.lax.top_k(aff.transpose(0, 2, 1), cap)  # [B,E,C]
+
+    xe = jnp.take_along_axis(x[:, None], tok_idx[..., None], axis=2)
+    xe = shard(xe, "batch", "expert", None, None)             # [B,E,C,D]
+
+    hg = pol.einsum("becd,edf->becf", xe, p["we_gate"].astype(xe.dtype))
+    hl = pol.einsum("becd,edf->becf", xe, p["we_up"].astype(xe.dtype)) if glu else None
+    h = activate(hg, hl, cfg.activation)
+    h = shard(h, "batch", "expert", None, None)
+    oe = pol.einsum("becf,efd->becd", h, p["we_down"].astype(xe.dtype))
+    oe = oe * w_ec[..., None].astype(oe.dtype)
+
+    out = jnp.zeros((b, s, d), x.dtype)
+    out = jax.vmap(lambda ob, ib, vb: ob.at[ib.reshape(-1)].add(
+        vb.reshape(-1, d)))(out, tok_idx, oe)
+
+    if m.n_shared:
+        out = out + mlp_fwd(p["shared"], x, cfg, pol)
+
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(idx, m.n_experts), axis=2),
+                   axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(f_e * p_e) * m.router_aux_weight
+    return shard(out, "batch", None, None), aux
+
+
+# =========================================================================
+# Attention-bearing blocks (dense / local / moe / attn)
+# =========================================================================
+
+def init_attn_block(cfg: ArchConfig, key, block_type: str) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.kv_heads
+    keys = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(d)
+    std_o = 1.0 / math.sqrt(h * hd)
+    p = {
+        "ln1": init_norm(cfg, d),
+        "wq": jax.random.normal(keys[0], (d, h * hd), jnp.float32) * std,
+        "wk": jax.random.normal(keys[1], (d, kv * hd), jnp.float32) * std,
+        "wv": jax.random.normal(keys[2], (d, kv * hd), jnp.float32) * std,
+        "wo": jax.random.normal(keys[3], (h * hd, d), jnp.float32) * std_o,
+        "ln2": init_norm(cfg, d),
+    }
+    if block_type == "moe":
+        p["moe"] = init_moe(cfg, keys[4])
+    else:
+        d_ff = cfg.d_ff
+        if block_type == "dense_first" and cfg.moe:      # MoE arch dense layers
+            d_ff = cfg.moe.dense_d_ff or cfg.d_ff
+        p["mlp"] = init_mlp(cfg, keys[4], d, d_ff)
+    return p
+
+
+def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
+                     cache, cache_index, mode: str, block_type: str):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.kv_heads
+    window = cfg.window if block_type == "local" else None
+
+    xn = apply_norm(p["ln1"], x, cfg)
+    q = pol.dot(xn, p["wq"].astype(x.dtype)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = pol.dot(xn, p["wk"].astype(x.dtype)).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    v = pol.dot(xn, p["wv"].astype(x.dtype)).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "heads", None, None)
+    k = shard(k, "batch", "kv", None, None)
+    v = shard(v, "batch", "kv", None, None)
+    qg = _grouped(q, kvh)
+
+    new_cache = cache
+    if mode == "decode":
+        assert s == 1 and cache is not None
+        smax = cache["k"].shape[2]
+        kpos = jnp.arange(smax)
+        if window and smax <= window:
+            # ring buffer: overwrite the oldest slot; all live slots are
+            # within the window by construction.
+            slot = jax.lax.rem(cache_index, smax)
+            valid = kpos < jnp.minimum(cache_index + 1, smax)
+        else:
+            slot = cache_index
+            valid = kpos <= cache_index
+            if window:
+                valid &= kpos > cache_index - window
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+        k_cache = shard(k_cache, "batch", "kv", "kv_seq", None)
+        v_cache = shard(v_cache, "batch", "kv", "kv_seq", None)
+        attn = decode_attention(qg, k_cache, v_cache, valid, policy=pol)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        causal = not (cfg.enc_dec and block_type == "encoder")
+        if s > 2048:
+            if cfg.attn_impl == "flash":
+                from repro.models.flash import flash_attention as _fa
+                if pol is not None:
+                    qg, k, v = pol.truncate(qg), pol.truncate(k), pol.truncate(v)
+                attn = _fa(qg, k, v, causal, window)
+                if pol is not None:
+                    attn = pol.truncate(attn)
+            else:
+                attn = chunked_attention(qg, k, v, causal=causal,
+                                         window=window, policy=pol)
+        else:
+            attn = full_attention(qg, k, v, causal=causal, window=window, policy=pol)
+        if mode == "prefill" and cache is not None:
+            smax = cache["k"].shape[2]
+            kc = jnp.zeros_like(cache["k"])
+            vc = jnp.zeros_like(cache["v"])
+            if window:
+                # window cache: keep only the last `smax_local` positions
+                keep = min(smax, s)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, :, s - keep:].astype(kc.dtype), 0, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, :, s - keep:].astype(vc.dtype), 0, axis=2)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, axis=2)
+            new_cache = {"k": shard(kc, "batch", "kv", "kv_seq", None),
+                         "v": shard(vc, "batch", "kv", "kv_seq", None)}
+
+    attn = attn.reshape(b, kvh * (h // kvh), s, hd).transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    x = x + pol.dot(attn, p["wo"].astype(x.dtype))
+    x = shard(x, "batch", None, None)
+
+    aux = jnp.zeros((), jnp.float32)
+    xn2 = apply_norm(p["ln2"], x, cfg)
+    if block_type == "moe":
+        y, aux = moe_fwd(p["moe"], xn2, cfg, pol)
+    else:
+        y = mlp_fwd(p["mlp"], xn2, cfg, pol)
+    x = x + y
+    return shard(x, "batch", None, None), new_cache, aux
+
+
+# =========================================================================
+# Mamba-1 (falcon-mamba)
+# =========================================================================
+
+def _causal_conv1d(x, kernel, bias):
+    """x: [B,S,C]; kernel: [K,C] depthwise; causal."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), kernel[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + bias).astype(x.dtype)
+
+
+def init_mamba1(cfg: ArchConfig, key) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = s.dt_rank or d // 16
+    keys = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "ln": init_norm(cfg, d),
+        "w_in": jax.random.normal(keys[0], (d, 2 * di), jnp.float32) * std,
+        "conv_w": jax.random.normal(keys[1], (s.conv_kernel, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_x": jax.random.normal(keys[2], (di, dtr + 2 * s.state), jnp.float32) / math.sqrt(di),
+        "w_dt": jax.random.normal(keys[3], (dtr, di), jnp.float32) / math.sqrt(dtr),
+        "b_dt": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, s.state + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(keys[4], (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def mamba1_apply(p, x, cfg: ArchConfig, pol: Policy, cache, mode: str):
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.expand * d
+    dtr = s_cfg.dt_rank or d // 16
+    n = s_cfg.state
+    kk = s_cfg.conv_kernel
+
+    xn = apply_norm(p["ln"], x, cfg)
+    xz = pol.dot(xn, p["w_in"].astype(x.dtype))            # [B,S,2di]
+    xpart, z = jnp.split(xz, 2, axis=-1)
+    xpart = shard(xpart, "batch", None, "mlp")
+
+    if mode == "decode":
+        window = jnp.concatenate([cache["conv"], xpart], axis=1)   # [B,K,di]
+        xc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                        p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc).astype(x.dtype)[:, None]              # [B,1,di]
+        new_conv = window[:, 1:]
+    else:
+        xc = jax.nn.silu(_causal_conv1d(xpart, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+        new_conv = None if cache is None else xpart[:, -(kk - 1):]
+
+    xdb = pol.dot(xc, p["w_x"].astype(x.dtype)).astype(jnp.float32)
+    dt_r, bmat, cmat = jnp.split(xdb, [dtr, dtr + n], axis=-1)     # [B,S,*]
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_r, p["w_dt"]) + p["b_dt"])
+    a = -jnp.exp(p["a_log"])                                        # [di, n]
+    xcf = xc.astype(jnp.float32)
+
+    if mode == "decode":
+        h0 = cache["ssm"].astype(jnp.float32)                       # [B,di,n]
+        da = jnp.exp(dt[:, 0, :, None] * a)                         # [B,di,n]
+        hn = h0 * da + (dt[:, 0, :, None] * bmat[:, 0, None, :]) * xcf[:, 0, :, None]
+        y = jnp.einsum("bdn,bn->bd", hn, cmat[:, 0])[:, None]       # [B,1,di]
+        new_ssm = hn.astype(cache["ssm"].dtype)
+    else:
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            da = jnp.exp(dtt[:, :, None] * a)                       # [B,di,n]
+            h = h * da + (dtt[:, :, None] * bt[:, None, :]) * xt[:, :, None]
+            yt = jnp.einsum("bdn,bn->bd", h, ct)
+            return h, yt
+
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+        if cfg.ssm_impl == "unroll8" and s % 8 == 0:
+            # 8 timesteps per scan body: the state lives in registers/VMEM
+            # across the unrolled steps, cutting its HBM round-trips 8x.
+            u = 8
+
+            def chunk_step(h, inp):
+                xs_c, dt_c, b_c, c_c = inp                  # [u, B, ...]
+                ys = []
+                for t in range(u):
+                    h, yt = step(h, (xs_c[t], dt_c[t], b_c[t], c_c[t]))
+                    ys.append(yt)
+                return h, jnp.stack(ys)
+
+            resh = lambda v: jnp.moveaxis(v, 1, 0).reshape(
+                (s // u, u) + (b,) + v.shape[2:])
+            xs = (resh(xcf), resh(dt), resh(bmat), resh(cmat))
+            hn, ys = jax.lax.scan(chunk_step, h0, xs)
+            y = jnp.moveaxis(ys.reshape((s, b) + ys.shape[3:]), 0, 1)
+        else:
+            xs = (jnp.moveaxis(xcf, 1, 0), jnp.moveaxis(dt, 1, 0),
+                  jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+            hn, ys = jax.lax.scan(step, h0, xs)
+            y = jnp.moveaxis(ys, 0, 1)                              # [B,S,di]
+        new_ssm = hn if cache is not None else None
+
+    y = (y + p["d_skip"] * xcf).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = pol.dot(y, p["w_out"].astype(x.dtype))
+    new_cache = cache
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}
+    return x + out, new_cache, jnp.zeros((), jnp.float32)
+
+
+# =========================================================================
+# Mamba-2 (zamba2): multi-head SSD with scalar per-head decay
+# =========================================================================
+
+def init_mamba2(cfg: ArchConfig, key) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    keys = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "ln": init_norm(cfg, d),
+        # order: [x(di) | z(di) | B(n) | C(n) | dt(nh)]
+        "w_in": jax.random.normal(keys[0], (d, 2 * di + 2 * s.state + nh), jnp.float32) * std,
+        "conv_w": jax.random.normal(keys[1], (s.conv_kernel, di + 2 * s.state), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * s.state,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(keys[2], (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def mamba2_apply(p, x, cfg: ArchConfig, pol: Policy, cache, mode: str):
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.expand * d
+    n = s_cfg.state
+    hd = s_cfg.head_dim
+    nh = di // hd
+    kk = s_cfg.conv_kernel
+
+    xn = apply_norm(p["ln"], x, cfg)
+    proj = pol.dot(xn, p["w_in"].astype(x.dtype))
+    # w_in output layout: [ x|B|C (conv'd, di+2n) | z (di) | dt (nh) ]
+    xbc = proj[..., : di + 2 * n]
+    z = proj[..., di + 2 * n: 2 * di + 2 * n]
+    dt_in = proj[..., -nh:]
+
+    if mode == "decode":
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)
+        conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"]) + p["conv_b"]
+        conv = jax.nn.silu(conv)[:, None]           # [B,1,di+2n]
+        new_conv = window[:, 1:]
+    else:
+        conv = jax.nn.silu(_causal_conv1d(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32))
+        new_conv = None if cache is None else xbc[:, -(kk - 1):]
+
+    xpart = conv[..., :di].reshape(b, -1, nh, hd)   # [B,S,nh,hd]
+    bmat = conv[..., di: di + n]                    # [B,S,n]
+    cmat = conv[..., di + n:]                       # [B,S,n]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])   # [B,S,nh]
+    a = -jnp.exp(p["a_log"])                        # [nh]
+
+    if mode == "decode":
+        h0 = cache["ssm"].astype(jnp.float32)       # [B,nh,hd,n]
+        da = jnp.exp(dt[:, 0] * a)                  # [B,nh]
+        upd = jnp.einsum("bhp,bn->bhpn", dt[:, 0, :, None] * xpart[:, 0], bmat[:, 0])
+        hn = h0 * da[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hn, cmat[:, 0])[:, None]      # [B,1,nh,hd]
+        new_ssm = hn.astype(cache["ssm"].dtype)
+    elif cfg.ssm_impl == "ssd" and s % 64 == 0:
+        y, hn = _ssd_chunked(xpart.astype(jnp.float32), dt, bmat, cmat, a,
+                             chunk=64)
+        new_ssm = hn if cache is not None else None
+    else:
+        def step(h, inp):
+            xt, dtt, bt, ct = inp                   # [B,nh,hd],[B,nh],[B,n],[B,n]
+            da = jnp.exp(dtt * a)
+            h = h * da[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", dtt[:, :, None] * xt, bt)
+            yt = jnp.einsum("bhpn,bn->bhp", h, ct)
+            return h, yt
+
+        h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+        xs = (jnp.moveaxis(xpart.astype(jnp.float32), 1, 0), jnp.moveaxis(dt, 1, 0),
+              jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+        hn, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1)                  # [B,S,nh,hd]
+        new_ssm = hn if cache is not None else None
+
+    y = y + p["d_skip"][:, None] * xpart.astype(jnp.float32)
+    y = y.reshape(b, -1, di)
+    # gated RMSNorm then output proj
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6) * p["norm_scale"]
+    out = pol.dot(y.astype(x.dtype), p["w_out"].astype(x.dtype))
+    new_cache = cache
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}
+    return x + out, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _ssd_chunked(x, dt, bmat, cmat, a, chunk=64):
+    """Mamba-2 SSD block decomposition (hillclimb: ssm_impl='ssd').
+
+    x: [B,S,nh,hd]; dt: [B,S,nh]; bmat/cmat: [B,S,n]; a: [nh] (<0).
+    Scalar per-head decay makes the intra-chunk kernel 1-semiseparable:
+
+        y_t = C_t . (exp(cum_t) h_in)                       (inter-chunk)
+            + sum_{s<=t} exp(cum_t - cum_s) (C_t.B_s) dt_s x_s   (intra)
+
+    cum is the within-chunk cumsum of log-decay (<= 0), so every exp
+    argument is a difference <= 0 — numerically safe without re-centering.
+    State h round-trips HBM once per CHUNK (not per step) and the intra-
+    chunk term is MXU matmuls — the same trade the Mamba-2 paper makes.
+    Returns (y [B,S,nh,hd], h_final [B,nh,hd,n]).
+    """
+    b_, s_, nh_, hd_ = x.shape
+    n_ = bmat.shape[-1]
+    nc = s_ // chunk
+    xc = x.reshape(b_, nc, chunk, nh_, hd_)
+    dtc = dt.reshape(b_, nc, chunk, nh_)
+    bc = bmat.reshape(b_, nc, chunk, n_)
+    cc = cmat.reshape(b_, nc, chunk, n_)
+
+    loga = dtc * a                                     # [B,nc,T,nh] (<= 0)
+    cum = jnp.cumsum(loga, axis=2)                     # within-chunk cumsum
+
+    def chunk_step(h, inp):
+        xi, dti, bi, ci, cumi = inp                    # [B,T,...]
+        # intra-chunk: M[b,h,t,s] = exp(cum_t - cum_s) * (C_t . B_s), s<=t
+        g = jnp.einsum("btn,bsn->bts", ci, bi)         # [B,T,T]
+        dcay = jnp.exp(cumi[:, :, None, :] - cumi[:, None, :, :])  # [B,T,T,nh]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(tri[None, :, :, None], g[..., None] * dcay, 0.0)
+        dtx = dti[..., None] * xi                      # [B,T,nh,hd]
+        y_intra = jnp.einsum("btsh,bshp->bthp", m, dtx)
+        # inter-chunk: y_t += exp(cum_t) * C_t . h_in   (per head)
+        y_inter = jnp.einsum("btn,bhpn->bthp", ci, h) * jnp.exp(cumi)[..., None]
+        # state update: h' = exp(cum_T) h + sum_s exp(cum_T - cum_s) dtx_s (x) B_s
+        tail = jnp.exp(cumi[:, -1:, :] - cumi)         # [B,T,nh]
+        upd = jnp.einsum("bshp,bsn,bsh->bhpn", dtx, bi, tail)
+        h_new = h * jnp.exp(cumi[:, -1])[:, :, None, None] + upd
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b_, nh_, hd_, n_), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0),
+          jnp.moveaxis(cum, 1, 0))
+    hn, ys = jax.lax.scan(chunk_step, h0, xs)          # ys [nc,B,T,nh,hd]
+    y = jnp.moveaxis(ys, 0, 1).reshape(b_, s_, nh_, hd_)
+    return y, hn
+
+
+# =========================================================================
+# Uniform dispatch + caches
+# =========================================================================
+
+def init_block(block_type: str, cfg: ArchConfig, key):
+    if block_type in ("dense", "local", "moe", "attn", "dense_first", "encoder"):
+        return init_attn_block(cfg, key, block_type)
+    if block_type == "mamba1":
+        return init_mamba1(cfg, key)
+    if block_type == "mamba2":
+        return init_mamba2(cfg, key)
+    raise ValueError(block_type)
+
+
+def block_apply(block_type: str, params, x, cfg: ArchConfig, pol: Policy,
+                positions, cache=None, cache_index=0, mode: str = "train"):
+    if block_type in ("dense", "local", "moe", "attn", "dense_first", "encoder"):
+        return attn_block_apply(params, x, cfg, pol, positions, cache,
+                                cache_index, mode, block_type)
+    if block_type == "mamba1":
+        return mamba1_apply(params, x, cfg, pol, cache, mode)
+    if block_type == "mamba2":
+        return mamba2_apply(params, x, cfg, pol, cache, mode)
+    raise ValueError(block_type)
+
+
+def init_cache(block_type: str, cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    if block_type in ("dense", "moe", "attn", "dense_first"):
+        shape = (batch, cfg.kv_heads, max_len, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if block_type == "local":
+        wlen = min(max_len, cfg.window or max_len)
+        shape = (batch, cfg.kv_heads, wlen, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if block_type == "mamba1":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        return {"conv": jnp.zeros((batch, s.conv_kernel - 1, di), dtype),
+                "ssm": jnp.zeros((batch, di, s.state), jnp.float32)}
+    if block_type == "mamba2":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        nh = di // s.head_dim
+        return {"conv": jnp.zeros((batch, s.conv_kernel - 1, di + 2 * s.state), dtype),
+                "ssm": jnp.zeros((batch, nh, s.head_dim, s.state), jnp.float32)}
+    raise ValueError(block_type)

@@ -1,0 +1,173 @@
+"""Memory-optimal chunked attention with a flash-style custom VJP.
+
+WHY (hypothesis from the §Perf loop, EXPERIMENTS.md): the naive chunked
+attention (models/blocks.py:chunked_attention) is numerically fine but its
+*autodiff schedule* is catastrophic — under `jax.checkpoint` the re-forward
+linearizes the inner kv-scan, which stacks every per-tile residual
+(scores, probs, corrections) into [nq, nk, ...] f32 buffers.  The static
+HLO analysis of minicpm/train_4k showed ~80% of all HBM traffic coming from
+exactly those DUS/DS stacks (~90 TB/device/step).
+
+FIX: flash attention's backward — save only (out, rowwise logsumexp) from
+the forward and *recompute* score tiles in the backward pass.  Residual
+memory drops from O(S^2) to O(S), traffic drops by the stack factor, at the
+cost of one extra QK^T recompute (compute term was 100x under the memory
+term, so trading FLOPs for bytes is the right direction on v5e's
+197TFLOP/s / 819GB/s balance point).
+
+This is also exactly the schedule of the Pallas TPU kernel
+(kernels/flash_attention.py) — the pure-JAX version keeps the multi-pod
+dry-run compilable on the CPU backend while the kernel is the on-TPU
+hot-spot implementation.
+
+Interface matches blocks.chunked_attention: q [B,KV,G,Sq,d], k/v [B,KV,Sk,d].
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_MASK = -1e30
+
+
+def _mask_for(iq, ik, q_chunk, kv_chunk, sq, sk, causal, window):
+    qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None] + (sk - sq)
+    kpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+    mask = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=None,
+                    q_chunk=1024, kv_chunk=1024):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk):
+    b, kvh, g, sq, d = q.shape
+    sk = k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+    kc = k.reshape(b, kvh, nk, kv_chunk, d)
+    vc = v.reshape(b, kvh, nk, kv_chunk, d)
+    qc = q.reshape(b, kvh, g, nq, q_chunk, d)
+
+    def q_step(iq):
+        qi = jax.lax.dynamic_index_in_dim(qc, iq, 3, keepdims=False) \
+            .astype(jnp.float32)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            ki = jax.lax.dynamic_index_in_dim(kc, ik, 2, keepdims=False)
+            vi = jax.lax.dynamic_index_in_dim(vc, ik, 2, keepdims=False)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi,
+                           ki.astype(jnp.float32)) * scale
+            mask = _mask_for(iq, ik, q_chunk, kv_chunk, sq, sk, causal, window)
+            s = jnp.where(mask[None, None, None], s, _MASK)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.where(mask[None, None, None], jnp.exp(s - m_new), 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("bkgqs,bksd->bkgqd", p,
+                                              vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk, 1), _MASK, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))          # logsumexp rows
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).astype(q.dtype), lse
+
+    outs = jax.lax.map(q_step, jnp.arange(nq))
+    out = jnp.moveaxis(outs[0], 0, 3).reshape(b, kvh, g, sq, d)
+    lse = jnp.moveaxis(outs[1], 0, 3).reshape(b, kvh, g, sq, 1)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, kvh, g, sq, d = q.shape
+    sk = k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    doutf = dout.astype(jnp.float32)
+    outf = out.astype(jnp.float32)
+    # D_i = sum_d dout_i * out_i  (flash-2 backward identity)
+    delta = jnp.sum(doutf * outf, axis=-1, keepdims=True)   # [B,KV,G,Sq,1]
+
+    kc = k.reshape(b, kvh, nk, kv_chunk, d)
+    vc = v.reshape(b, kvh, nk, kv_chunk, d)
+    qc = q.reshape(b, kvh, g, nq, q_chunk, d)
+    dc = doutf.reshape(b, kvh, g, nq, q_chunk, d)
+    lc = lse.reshape(b, kvh, g, nq, q_chunk, 1)
+    dl = delta.reshape(b, kvh, g, nq, q_chunk, 1)
+
+    def q_step(carry, iq):
+        dk_acc, dv_acc = carry
+        qi = jax.lax.dynamic_index_in_dim(qc, iq, 3, keepdims=False) \
+            .astype(jnp.float32)
+        di = jax.lax.dynamic_index_in_dim(dc, iq, 3, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(lc, iq, 3, keepdims=False)
+        deli = jax.lax.dynamic_index_in_dim(dl, iq, 3, keepdims=False)
+
+        def kv_step(inner, ik):
+            dq_acc, dk_a, dv_a = inner
+            ki = jax.lax.dynamic_index_in_dim(kc, ik, 2, keepdims=False) \
+                .astype(jnp.float32)
+            vi = jax.lax.dynamic_index_in_dim(vc, ik, 2, keepdims=False) \
+                .astype(jnp.float32)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, ki) * scale
+            mask = _mask_for(iq, ik, q_chunk, kv_chunk, sq, sk, causal, window)
+            s = jnp.where(mask[None, None, None], s, _MASK)
+            p = jnp.exp(s - li)                              # [B,KV,G,cq,ck]
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            dv_blk = jnp.einsum("bkgqs,bkgqd->bksd", p, di)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", di, vi)
+            ds = p * (dp - deli) * scale
+            dq_blk = jnp.einsum("bkgqs,bksd->bkgqd", ds, ki)
+            dk_blk = jnp.einsum("bkgqs,bkgqd->bksd", ds, qi)
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, jax.lax.dynamic_index_in_dim(dk_a, ik, 2, keepdims=False)
+                + dk_blk, ik, 2)
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, jax.lax.dynamic_index_in_dim(dv_a, ik, 2, keepdims=False)
+                + dv_blk, ik, 2)
+            return (dq_acc + dq_blk, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        (dqi, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dqi
+
+    dk0 = jnp.zeros((b, kvh, nk, kv_chunk, d), jnp.float32)
+    dv0 = jnp.zeros((b, kvh, nk, kv_chunk, d), jnp.float32)
+    (dkc, dvc), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(b, kvh, g, sq, d).astype(q.dtype)
+    dk = dkc.reshape(b, kvh, sk, d).astype(k.dtype)
+    dv = dvc.reshape(b, kvh, sk, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

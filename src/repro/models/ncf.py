@@ -1,0 +1,72 @@
+"""Neural Collaborative Filtering (He et al. 2017) — the paper's §4.4 model.
+
+NeuMF topology: GMF branch (elementwise product of embeddings) + MLP branch
+(concatenated embeddings through a tower), fused into one logit.  Embedding
+lookups and all MLP matmuls run through the numeric policy, matching the
+paper's "Matrix-Multiplications and look-ups from the embeddings in S2FP8".
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import Policy
+
+
+def init_ncf(key, n_users: int, n_items: int, factors: int = 8,
+             mlp_layers=(64, 32, 16, 8)) -> Dict:
+    ks = jax.random.split(key, 6 + len(mlp_layers))
+    mlp_embed = mlp_layers[0] // 2
+    p = {
+        "gmf_user": jax.random.normal(ks[0], (n_users, factors)) * 0.01,
+        "gmf_item": jax.random.normal(ks[1], (n_items, factors)) * 0.01,
+        "mlp_user": jax.random.normal(ks[2], (n_users, mlp_embed)) * 0.01,
+        "mlp_item": jax.random.normal(ks[3], (n_items, mlp_embed)) * 0.01,
+        "mlp": [],
+        "out": jax.random.normal(ks[4], (factors + mlp_layers[-1], 1)) * 0.1,
+    }
+    d_in = mlp_layers[0]
+    for i, d_out in enumerate(mlp_layers[1:]):
+        p["mlp"].append({
+            "w": jax.random.normal(ks[5 + i], (d_in, d_out)) / math.sqrt(d_in),
+            "b": jnp.zeros((d_out,)),
+        })
+        d_in = d_out
+    return p
+
+
+def ncf_logits(p, users, items, pol: Policy):
+    def lookup(table, idx):
+        if pol.mode in ("s2fp8", "s2fp8_e4m3", "fp8", "fp8_ls"):
+            table = pol.truncate(table)
+        return jnp.take(table, idx, axis=0)
+
+    gmf = lookup(p["gmf_user"], users) * lookup(p["gmf_item"], items)
+    h = jnp.concatenate([lookup(p["mlp_user"], users),
+                         lookup(p["mlp_item"], items)], axis=-1)
+    for layer in p["mlp"]:
+        h = jax.nn.relu(pol.dot(h, layer["w"]) + layer["b"])
+    fused = jnp.concatenate([gmf, h], axis=-1)
+    return pol.dot(fused, p["out"])[..., 0]
+
+
+def loss_fn(p, batch, pol: Policy):
+    """Binary cross-entropy on implicit feedback (label in {0,1})."""
+    logits = ncf_logits(p, batch["users"], batch["items"], pol)
+    labels = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"nll": loss}
+
+
+def hit_ratio(p, users, pos_items, neg_items, pol: Policy, k: int = 10):
+    """HR@k: rank 1 positive among 99 negatives (paper's eval protocol)."""
+    all_items = jnp.concatenate([pos_items[:, None], neg_items], axis=1)  # [B, 100]
+    b, n = all_items.shape
+    u = jnp.repeat(users[:, None], n, axis=1)
+    scores = ncf_logits(p, u.reshape(-1), all_items.reshape(-1), pol).reshape(b, n)
+    rank_of_pos = jnp.sum(scores > scores[:, :1], axis=1)
+    return jnp.mean(rank_of_pos < k)

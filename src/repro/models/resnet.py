@@ -1,0 +1,105 @@
+"""CIFAR ResNets (He et al. 2016, pre-activation) — the paper's §4.2 models.
+
+ResNet-20/32/44/56 (6n+2 basic-block family) for the convergence benchmark.
+All convs run through the numeric policy (conv IS a GEMM to the paper); batch
+norm runs in f32 with running statistics carried in a separate state pytree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import Policy
+
+
+def _conv_init(key, k, cin, cout):
+    fan = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout)) * math.sqrt(2.0 / fan)
+
+
+def init_bn(c):
+    return ({"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))},
+            {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))})
+
+
+def batch_norm(p, st, x, train: bool, momentum=0.9):
+    xf = x.astype(jnp.float32)
+    if train:
+        mean = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new_st = {"mean": momentum * st["mean"] + (1 - momentum) * mean,
+                  "var": momentum * st["var"] + (1 - momentum) * var}
+    else:
+        mean, var, new_st = st["mean"], st["var"], st
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y.astype(x.dtype), new_st
+
+
+def init_resnet(key, depth: int = 20, n_classes: int = 10, width: int = 16):
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6n+2"
+    n = (depth - 2) // 6
+    ks = iter(jax.random.split(key, depth * 3 + 8))
+    params: Dict = {"stem": _conv_init(next(ks), 3, 3, width), "blocks": [], "bns": []}
+    state: Dict = {"bns": []}
+    bn_p, bn_s = init_bn(width)
+    params["stem_bn"], stem_bn_s = bn_p, bn_s
+    state["stem_bn"] = stem_bn_s
+    cin = width
+    for stage, cout in enumerate([width, 2 * width, 4 * width]):
+        for blk in range(n):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            bp1, bs1 = init_bn(cin)
+            bp2, bs2 = init_bn(cout)
+            block = {
+                "bn1": bp1, "conv1": _conv_init(next(ks), 3, cin, cout),
+                "bn2": bp2, "conv2": _conv_init(next(ks), 3, cout, cout),
+            }
+            if stride != 1 or cin != cout:
+                block["proj"] = _conv_init(next(ks), 1, cin, cout)
+            params["blocks"].append(block)
+            state["bns"].append({"bn1": bs1, "bn2": bs2})
+            cin = cout
+    fp, fs = init_bn(cin)
+    params["final_bn"], state["final_bn"] = fp, fs
+    params["fc"] = jax.random.normal(next(ks), (cin, n_classes)) / math.sqrt(cin)
+    return params, state
+
+
+def resnet_apply(params, state, x, pol: Policy, train: bool):
+    """x: [B, 32, 32, 3].  Returns (logits, new_state)."""
+    new_state = {"bns": []}
+    h = pol.conv(x, params["stem"])
+    h, new_state["stem_bn"] = batch_norm(params["stem_bn"], state["stem_bn"], h, train)
+    h = jax.nn.relu(h)
+    n = len(params["blocks"]) // 3
+    for i, (block, bst) in enumerate(zip(params["blocks"], state["bns"])):
+        # first block of stages 2 and 3 downsamples (strides are structural,
+        # derived from position — params hold arrays only, keeping grad trees clean)
+        stride = 2 if i in (n, 2 * n) else 1
+        y, bs1 = batch_norm(block["bn1"], bst["bn1"], h, train)
+        y = jax.nn.relu(y)
+        shortcut = h
+        if "proj" in block:
+            shortcut = pol.conv(y, block["proj"], stride=(stride, stride))
+        y = pol.conv(y, block["conv1"], stride=(stride, stride))
+        y, bs2 = batch_norm(block["bn2"], bst["bn2"], y, train)
+        y = jax.nn.relu(y)
+        y = pol.conv(y, block["conv2"])
+        h = shortcut + y
+        new_state["bns"].append({"bn1": bs1, "bn2": bs2})
+    h, new_state["final_bn"] = batch_norm(params["final_bn"], state["final_bn"], h, train)
+    h = jax.nn.relu(h)
+    h = jnp.mean(h, axis=(1, 2))
+    return pol.dot(h, params["fc"]), new_state
+
+
+def loss_fn(params, state, batch, pol: Policy, train: bool = True):
+    logits, new_state = resnet_apply(params, state, batch["images"], pol, train)
+    logits = logits.astype(jnp.float32)
+    onehot = jax.nn.one_hot(batch["labels"], logits.shape[-1])
+    nll = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return nll, ({"nll": nll, "acc": acc}, new_state)

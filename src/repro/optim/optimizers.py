@@ -1,0 +1,122 @@
+"""Optimizers with FP32 master weights (paper Fig. 4).
+
+The model may run its GEMMs in S2FP8/FP8/bf16, but the optimizer state —
+master params, momenta — is FP32, and updates consume the (already
+S2FP8-truncated, for those modes) gradients.  Implemented directly (no
+optax dependency in this container): SGD-momentum (paper's ResNet runs),
+AdamW (Transformer/NCF + modern archs), plus global-norm clipping.
+
+State layout is a pytree mirroring params, so the FSDP sharding rules for
+params apply verbatim to optimizer state (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any            # momentum / first moment (pytree or None)
+    v: Any            # second moment (pytree or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
+
+    def update(grads, state, params, lr):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+
+        def new_m_fn(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return momentum * m + g
+
+        new_m = jax.tree_util.tree_map(new_m_fn, grads, state.m, params)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_m)
+        return new_params, OptState(state.step + 1, new_m, None)
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip_norm: Optional[float] = 1.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW with FP32 master params.  ``moment_dtype=bf16`` halves the
+    optimizer-state footprint (the capacity lever for the 340B/1T configs —
+    EXPERIMENTS.md §Capacity); moment *arithmetic* stays f32, only storage
+    rounds."""
+    def _zeros_like(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, moment_dtype), params)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like(params), _zeros_like(params))
+
+    def update(grads, state, params, lr):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = (state.step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        tmap = jax.tree_util.tree_map
+        new_m = tmap(lambda g, m: (b1 * m.astype(jnp.float32)
+                                   + (1 - b1) * g.astype(jnp.float32)),
+                     grads, state.m)
+        new_v = tmap(lambda g, v: (b2 * v.astype(jnp.float32)
+                                   + (1 - b2) * jnp.square(g.astype(jnp.float32))),
+                     grads, state.v)
+
+        def upd(p, m, v):
+            step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                step_ = step_ + lr * weight_decay * p32
+            return (p32 - step_).astype(p.dtype)
+
+        new_params = tmap(upd, params, new_m, new_v)
+        store = lambda tree: tmap(lambda x: x.astype(moment_dtype), tree)
+        return new_params, OptState(state.step + 1, store(new_m), store(new_v))
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgdm":
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(name)

@@ -1,0 +1,51 @@
+"""LR schedules: WSD (minicpm), cosine, and the paper's step decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(base_lr: float, warmup: int, stable: int, decay: int):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat, then 1/sqrt-ish decay."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        in_decay = jnp.maximum(step - (warmup + stable), 0.0)
+        factor = 0.5 ** (in_decay / jnp.maximum(decay, 1))
+        return warm * factor
+    return fn
+
+
+def cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return fn
+
+
+def step_decay(base_lr: float, boundaries, factor: float = 0.1):
+    """The paper's ResNet schedule: x0.1 at fixed epochs/steps."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        mult = jnp.asarray(1.0, jnp.float32)
+        for b in boundaries:
+            mult = jnp.where(step >= b, mult * factor, mult)
+        return base_lr * mult
+    return fn
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def make_schedule(name: str, base_lr: float, total_steps: int, warmup: int = 0):
+    if name == "wsd":
+        stable = int(total_steps * 0.8) - warmup
+        return wsd(base_lr, warmup, max(stable, 1), max(total_steps - warmup - stable, 1))
+    if name == "cosine":
+        return cosine(base_lr, warmup, total_steps)
+    if name == "constant":
+        return constant(base_lr)
+    raise ValueError(name)

@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Models annotate tensors with *logical* axis names; a rule table maps those to
+physical mesh axes.  The table is process-global state set by the launcher
+(``use_rules``); when unset (unit tests, single-device smoke runs) every
+annotation is a no-op, so model code is mesh-agnostic.
+
+Physical meshes (launch/mesh.py):
+    single-pod: ("data", "model") = (16, 16)
+    multi-pod : ("pod", "data", "model") = (2, 16, 16)
+
+Default rule tables:
+
+  TRAIN_RULES                             DECODE_RULES
+    batch   -> (pod,) data                  batch   -> (pod,) data
+    fsdp    -> data          (ZeRO-3)       fsdp    -> None (params gathered
+    embed   -> None                                    once, then reused)
+    heads   -> model                        heads   -> model
+    kv      -> model                        kv      -> model
+    mlp     -> model                        mlp     -> model
+    expert  -> model (EP)                   expert  -> model
+    vocab   -> model                        vocab   -> model
+    seq     -> None                         kv_seq  -> model  (SP flash-decode
+                                                      for the 500k cells)
+
+Pipeline parallelism growth path (1000+ nodes): the segment structure in
+models/transformer.py (list of scanned layer-runs) is already the natural
+stage boundary — a "stage" axis would map segment k to mesh slice k with
+``jax.lax.ppermute`` activations between stages.  Not enabled for the
+assigned 512-chip meshes, where FSDP+TP saturates ICI first (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+TRAIN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "embed": None,
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "seq": None,
+    "kv_seq": None,
+    "conv": None,
+    "state": None,
+}
+
+DECODE_RULES = dict(TRAIN_RULES)
+DECODE_RULES.update({
+    # flash-decode style: the KV-cache *sequence* axis carries the model
+    # axis (SP); head axes stay replicated so the one-token attention is a
+    # clean partial-softmax over sharded S (heads are tiny at S=1).
+    "heads": None,
+    "kv": None,
+    "kv_seq": ("model",),
+})
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh_axes() -> Tuple[str, ...]:
+    return getattr(_state, "mesh_axes", ())
+
+
+def _axis_sizes() -> Dict[str, int]:
+    return getattr(_state, "axis_sizes", {})
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict, mesh_axes, axis_sizes: Optional[Dict[str, int]] = None):
+    """Activate a logical->physical table for model tracing in this thread.
+
+    ``mesh_axes`` may be a tuple of names or a dict name->size; sizes enable
+    the divisibility guard in :func:`shard` (a logical axis whose tensor dim
+    does not divide by the mapped mesh axes is silently replicated — e.g.
+    36 attention heads on a 16-way model axis).
+    """
+    if isinstance(mesh_axes, dict):
+        axis_sizes = dict(mesh_axes)
+        mesh_axes = tuple(mesh_axes)
+    prev = (_rules(), _mesh_axes(), _axis_sizes())
+    _state.rules = rules
+    _state.mesh_axes = tuple(mesh_axes)
+    _state.axis_sizes = axis_sizes or {}
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh_axes, _state.axis_sizes = prev
+
+
+def resolve(*logical: Optional[str]) -> P:
+    """Logical axis names -> PartitionSpec under the active rules."""
+    rules = _rules()
+    mesh_axes = set(_mesh_axes())
+    if rules is None:
+        return P()
+    spec, used = [], set()
+    for name in logical:
+        if name is None:
+            spec.append(None)
+            continue
+        phys = rules.get(name)
+        if phys is None:
+            spec.append(None)
+            continue
+        # keep only axes present on this mesh and not already consumed
+        keep = tuple(a for a in phys if a in mesh_axes and a not in used)
+        used.update(keep)
+        if not keep:
+            spec.append(None)
+        elif len(keep) == 1:
+            spec.append(keep[0])
+        else:
+            spec.append(keep)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation; no-op outside an active rule table.
+
+    Applies the divisibility guard: any dim that does not divide evenly by
+    the product of its mapped mesh axes is replicated instead.
+    """
+    if _rules() is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"shard(): {len(logical)} axes for rank-{x.ndim} tensor")
+    spec = resolve(*logical)
+    sizes = _axis_sizes()
+    guarded = []
+    for dim, entry in zip(x.shape, spec):
+        if entry is None:
+            guarded.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        guarded.append(entry if (prod > 0 and dim % prod == 0) else None)
+    return jax.lax.with_sharding_constraint(x, P(*guarded))
+
+
+def guarded_spec(shape, *logical: Optional[str]) -> P:
+    """Like shard()'s guard but returns the PartitionSpec (for in_shardings)."""
+    if _rules() is None:
+        return P()
+    spec = resolve(*logical)
+    sizes = _axis_sizes()
+    guarded = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            guarded.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        guarded.append(entry if (prod > 0 and dim % prod == 0) else None)
+    return P(*guarded)
+
+
+def active() -> bool:
+    return _rules() is not None

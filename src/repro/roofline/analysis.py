@@ -1,0 +1,172 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute_term    = HLO_FLOPs / (chips x peak)        [s]
+  memory_term     = HLO_bytes / (chips x HBM_bw)      [s]
+  collective_term = collective_bytes / (chips x link) [s]
+
+``cost_analysis`` FLOPs/bytes come from the SPMD-partitioned module and are
+*per-device* numbers on current JAX; we detect which convention the backend
+used by magnitude and normalize (see ``normalize_costs``).  Collective bytes
+are not in cost_analysis at all — we parse the partitioned HLO text and sum
+result-shape bytes per collective op with per-op traffic multipliers:
+
+  all-reduce      2x  (reduce-scatter + all-gather equivalent traffic)
+  all-gather      1x  (result bytes ~ bytes moved, x(n-1)/n ~ 1)
+  reduce-scatter  1x  (operand bytes)
+  all-to-all      1x
+  collective-permute 1x
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (v5e: ~2 usable axes typical)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# matches e.g. "f32[256,1024]{1,0}" or "(f32[8], bf16[4,4])"
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e5m2|f8e4m3fn|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device traffic bytes by collective kind, from partitioned HLO."""
+    out = {k: 0.0 for k in _COLL_MULT}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # result-type = lhs of " = <shape> <op>(" ; op name appears right
+        # after the result shape. Filter *-start/*-done pairs (count starts).
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        shape_txt, op, started = m.group(1), m.group(2), m.group(3)
+        out[op] += _shape_bytes(shape_txt) * _COLL_MULT[op]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float            # per device
+    hlo_gbytes: float            # per device
+    coll_gbytes: float           # per device
+    coll_breakdown: Dict[str, float]
+    model_gflops_total: float    # analytic 6*N*D (or active)
+    bytes_per_device: float      # from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_gflops * 1e9 / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_gbytes * 1e9 / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_gbytes * 1e9 / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs across chips."""
+        total = self.hlo_gflops * self.chips
+        return self.model_gflops_total / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.step_s * PEAK_FLOPS * self.chips
+        return (self.model_gflops_total * 1e9 / denom) if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops_per_dev": self.hlo_gflops,
+            "hlo_gbytes_per_dev": self.hlo_gbytes,
+            "coll_gbytes_per_dev": self.coll_gbytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_gflops_total": self.model_gflops_total,
+            "bytes_per_device": self.bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_s": self.step_s, "useful_flops_frac": self.useful_flops_frac,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train / 2*N*D inference (per paper-of-
+    record conventions), N = active params, D = tokens processed."""
+    from repro.configs.base import SHAPE_SPECS
+    seq, gbs, kind = SHAPE_SPECS[shape_name]
+    n = cfg.n_active_params()
+    if kind == "train":
+        tokens = seq * gbs if not cfg.enc_dec else (seq + 448) * gbs
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq * gbs
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * gbs
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, mem_bytes: float,
+            model_gflops_total: float) -> Roofline:
+    """Roofline terms from the trip-count-aware static HLO analyzer
+    (roofline/hlo_cost.py).  ``cost`` (XLA cost_analysis) is kept by the
+    caller for reference but NOT used — it undercounts while-loop bodies."""
+    from repro.roofline import hlo_cost
+    c = hlo_cost.cost_of(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops=c.flops / 1e9, hlo_gbytes=c.bytes / 1e9,
+        coll_gbytes=c.coll_bytes / 1e9,
+        coll_breakdown={k: v / 1e9 for k, v in c.coll.items()},
+        model_gflops_total=model_gflops_total,
+        bytes_per_device=mem_bytes)

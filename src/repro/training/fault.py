@@ -1,0 +1,42 @@
+"""Fault tolerance & straggler mitigation at 1000+ node scale — the design
+contract implemented by the pieces in this repo.
+
+1. Checkpoint/restart (implemented: checkpoint/manager.py)
+   - atomic rename-commit; restore scans for the newest COMPLETE step.
+   - per-leaf .npy shards: on a pod, each process writes its addressable
+     shards; restore is mesh-shape-agnostic (leaves are logical arrays),
+     so a job restarted on a DIFFERENT topology (elastic downscale after
+     losing a pod) restores the same model — this is why checkpoints store
+     unsharded leaves rather than device-local buffers.
+   - async flush with single-slot backpressure: the train loop never waits
+     on disk unless a previous write is still in flight.
+   - optional S2FP8 compression (the paper's format reused as a storage
+     codec) cuts checkpoint bytes ~4x, which at 1T params is the difference
+     between a 4 TB and a 1 TB restart read.
+
+2. Deterministic data (implemented: data/synthetic.py)
+   - batches are pure functions of (seed, step): restart is bit-exact and
+     any host can compute any slice, which makes both restart and elastic
+     re-sharding trivial (no data-loader state to checkpoint).
+
+3. Straggler mitigation (implemented: training/trainer.py watchdog)
+   - per-step wall-time watchdog flags outliers vs. the trailing median.
+   - at scale the launcher's response is: mark the slow host, restart the
+     job from the last checkpoint excluding it (elastic mesh: the restore
+     path above already handles the new topology). Synchronous SPMD has no
+     per-step work stealing — the correct production lever is fast detect
+     + fast restart, which the atomic-checkpoint + stateless-data design
+     optimizes for (restart cost = one checkpoint read, no data replay).
+
+4. Node failure during a step
+   - jax distributed runtime surfaces a failed collective as a program
+     error; the launcher (launch/train.py --resume auto) relaunches and
+     auto-resumes from the newest complete checkpoint. Checkpoint cadence
+     bounds lost work to ckpt_every steps; with async flush the cadence
+     can be tight (every few minutes) without step-time cost.
+
+5. Gradient-traffic reduction under degraded ICI (core/collectives.py)
+   - the S2FP8-compressed all-gather leg cuts DP sync bytes ~2.7x; under
+     a degraded link the same code path is the mitigation knob (enable
+     compression, shrink the sync volume).
+"""

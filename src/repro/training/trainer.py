@@ -1,0 +1,132 @@
+"""Train-step factory: numerics policy + loss scaling + master-FP32 update.
+
+Implements the paper's Figure 4 training procedure for any model whose loss
+is a closure over a Policy, plus the FP8+LS baselines (Eq. 6: scale the loss
+by lambda, unscale the grads) and S2FP8 statistics tracking (Fig. 5).
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for jax.jit with sharded in/out specs (launch/train.py) or plain
+CPU execution (examples/, tests/).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import s2fp8
+from repro.core.policy import Policy
+from repro.optim.optimizers import Optimizer, global_norm
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    schedule: Callable, policy: Policy,
+                    track_stats: bool = False,
+                    grad_sync: Optional[Callable] = None):
+    """loss_fn(params, batch, policy) -> (loss, metrics_dict).
+
+    * fp8_ls mode: loss scaled by policy.loss_scale before grad, grads
+      unscaled after (paper Eq. 6).
+    * grad_sync: optional cross-replica synchronizer (e.g. the S2FP8-
+      compressed DP all-reduce in core/collectives.py); under pjit the
+      default all-reduce is inserted by GSPMD instead.
+    * track_stats: returns (mu, m, alpha, beta) of a probe gradient tensor
+      (paper Fig. 5 evolution plots).
+    """
+    scale = policy.loss_scale if policy.mode == "fp8_ls" else 1.0
+
+    def scaled_loss(params, batch):
+        loss, metrics = loss_fn(params, batch, policy)
+        return loss * scale, metrics
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            scaled_loss, has_aux=True)(params, batch)
+        if scale != 1.0:
+            grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
+            loss = loss / scale
+        if grad_sync is not None:
+            grads = grad_sync(grads)
+        lr = schedule(step)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        out = dict(metrics)
+        out["loss"] = loss
+        out["grad_norm"] = global_norm(grads)
+        out["lr"] = lr
+        if track_stats:
+            probe = jax.tree_util.tree_leaves(grads)[-1]
+            out["probe_stats"] = s2fp8.tensor_stats(probe)
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_eval_step(loss_fn: Callable, policy: Policy):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch, policy)
+        return metrics
+    return eval_step
+
+
+class TrainLoop:
+    """Host-side loop: prefetch, checkpoint-every-k, auto-resume, watchdog.
+
+    Single-host here; the multi-host story is in training/fault.py.
+    """
+
+    def __init__(self, train_step, params, opt_state, data_fn,
+                 ckpt_manager=None, ckpt_every: int = 0,
+                 log_every: int = 10, watchdog_factor: float = 3.0):
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+        self.params = params
+        self.opt_state = opt_state
+        self.data_fn = data_fn
+        self.ckpt = ckpt_manager
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.watchdog_factor = watchdog_factor
+        self.start_step = 0
+        self.history = []
+
+    def maybe_resume(self):
+        if self.ckpt is None:
+            return
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            (self.params, self.opt_state), _ = self.ckpt.restore(
+                (self.params, self.opt_state), latest)
+            self.start_step = latest
+            print(f"[trainer] resumed from step {latest}")
+
+    def run(self, steps: int, print_fn=print):
+        import time
+        times = []
+        for step in range(self.start_step, steps):
+            batch = self.data_fn(step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch, jnp.int32(step))
+            metrics = {k: (float(v) if hasattr(v, "item") and getattr(v, 'ndim', 1) == 0 else v)
+                       for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            # straggler watchdog: flag steps > factor x trailing median
+            if len(times) >= 8:
+                med = sorted(times[-32:])[len(times[-32:]) // 2]
+                if dt > self.watchdog_factor * med:
+                    print_fn(f"[watchdog] step {step} took {dt:.3f}s "
+                             f"(median {med:.3f}s) — straggler suspected")
+            times.append(dt)
+            self.history.append(metrics)
+            if self.log_every and step % self.log_every == 0:
+                print_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
+                         f"lr {metrics['lr']:.2e} t {dt*1e3:.0f}ms")
+            if self.ckpt is not None and self.ckpt_every and \
+                    (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, (self.params, self.opt_state),
+                               blocking=False)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.history

@@ -1,0 +1,156 @@
+"""Dry-run machinery: param/batch/cache structs, pspec rules with
+divisibility guards, and a reduced-config multi-device lower+compile
+(subprocess: needs its own XLA device-count flag)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_reduced_config
+from repro.configs.base import SHAPE_SPECS
+from repro.launch import api
+
+jax.config.update("jax_platform_name", "cpu")
+
+SIZES = {"data": 16, "model": 16}
+
+
+def test_param_struct_no_allocation_1t_model():
+    """eval_shape of the 1T-param Kimi config must be instant and abstract."""
+    cfg = get_config("kimi_k2_1t_a32b")
+    struct = api.param_struct(cfg)
+    leaves = jax.tree_util.tree_leaves(struct)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    import math
+    total = sum(math.prod(l.shape) for l in leaves)
+    assert total > 0.9e12            # ~1T params
+
+
+def test_analytic_param_counts_sane():
+    # published totals (order-of-magnitude sanity, exact configs vary)
+    for arch, lo, hi in [("minicpm_2b", 2e9, 4e9),
+                         ("stablelm_12b", 10e9, 14e9),
+                         ("nemotron_4_340b", 300e9, 380e9),
+                         ("deepseek_moe_16b", 14e9, 20e9),
+                         ("kimi_k2_1t_a32b", 0.8e12, 1.3e12),
+                         ("falcon_mamba_7b", 6e9, 9e9),
+                         ("chameleon_34b", 30e9, 38e9)]:
+        n = get_config(arch).n_params()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("kimi_k2_1t_a32b")
+    assert cfg.n_active_params() < 0.06 * cfg.n_params()
+
+
+def test_param_pspecs_guard_non_divisible_heads():
+    """minicpm has 36 heads -> 36*64=2304 q-projection divides 16 so the
+    weight shards; gemma3 kv=1 -> kv projection (256) divides too; but a
+    7-wide dim must fall back to replicated."""
+    cfg = get_reduced_config("minicpm_2b")
+    struct = api.param_struct(cfg)
+    specs = api.param_pspecs(cfg, struct, SIZES)
+    flat = jax.tree_util.tree_leaves_with_path(specs.get("head", {})) \
+        if isinstance(specs, dict) else []
+    # direct check on a known leaf: embed [512, 128] -> both divide 16
+    embed_spec = specs["embed"]
+    assert embed_spec == P("model", "data")
+
+
+def test_param_pspecs_full_configs():
+    for arch in ["stablelm_12b", "kimi_k2_1t_a32b", "falcon_mamba_7b",
+                 "whisper_medium"]:
+        cfg = get_config(arch)
+        struct = api.param_struct(cfg)
+        specs = api.param_pspecs(cfg, struct, SIZES)
+        # every leaf got a PartitionSpec and dims divide
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_leaves_with_path(struct),
+                jax.tree_util.tree_leaves_with_path(
+                    specs, is_leaf=lambda x: isinstance(x, P))):
+            assert isinstance(spec, P)
+            for dim, entry in zip(leaf.shape, tuple(spec)):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                prod = 1
+                for a in axes:
+                    prod *= SIZES.get(a, 1)
+                assert dim % prod == 0, (arch, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("shape", list(SHAPE_SPECS))
+def test_batch_structs_all_shapes(shape):
+    for arch in ["minicpm_2b", "whisper_medium"]:
+        cfg = get_config(arch)
+        b = api.batch_struct(cfg, shape)
+        seq, gbs, kind = SHAPE_SPECS[shape]
+        leaves = jax.tree_util.tree_leaves(b)
+        assert all(l.shape[0] == gbs for l in leaves)
+
+
+def test_cache_struct_decode_shapes():
+    cfg = get_config("kimi_k2_1t_a32b")
+    c = api.cache_struct(cfg, "decode_32k")
+    leaves = jax.tree_util.tree_leaves(c)
+    assert any(l.shape[-2] == 32768 for l in leaves)        # KV seq axis
+    cfg2 = get_config("falcon_mamba_7b")
+    c2 = api.cache_struct(cfg2, "long_500k")
+    # mamba caches are O(1) in sequence length
+    assert all(l.shape[-1] <= 16_384 for l in jax.tree_util.tree_leaves(c2))
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_reduced_config
+from repro.core.policy import make_policy
+from repro.launch import api
+from repro.parallel import sharding as shd
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+out = {}
+for arch in ["minicpm_2b", "deepseek_moe_16b", "falcon_mamba_7b", "gemma3_1b"]:
+    cfg = get_reduced_config(arch)
+    pol = make_policy("s2fp8")
+    pstruct = api.param_struct(cfg)
+    pspecs = api.param_pspecs(cfg, pstruct, sizes)
+    bstruct = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    bspecs = api.batch_pspecs(bstruct, sizes)
+    sh = lambda specs: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    with mesh, shd.use_rules(shd.TRAIN_RULES, sizes):
+        step_fn, opt = api.make_train_step(cfg, pol)
+        ostruct = jax.eval_shape(opt.init, pstruct)
+        from repro.optim.optimizers import OptState
+        ospecs = OptState(P(), api.param_pspecs(cfg, ostruct.m, sizes),
+                          api.param_pspecs(cfg, ostruct.v, sizes))
+        compiled = jax.jit(step_fn, in_shardings=(sh(pspecs), sh(ospecs),
+                                                  sh(bspecs), None)) \
+            .lower(pstruct, ostruct, bstruct, jnp.int32(0)).compile()
+        out[arch] = "ok"
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_lower_compile_reduced():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=580)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert all(v == "ok" for v in out.values()), out

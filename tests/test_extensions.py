@@ -1,0 +1,77 @@
+"""Beyond-paper extensions: S2FP8-e4m3 ablation + bf16 optimizer moments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import s2fp8
+from repro.core.policy import make_policy
+from repro.optim import optimizers
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_e4m3_equalized_by_the_squeeze():
+    """Discovered property (EXPERIMENTS.md §Ablations): the squeeze factor
+    makes S2FP8 *mantissa-allocation agnostic*.  X-domain log error is
+    ulp/alpha = eps * spread / target_max; for e4m3 (eps 2^-4, target 2^8)
+    vs e5m2 (eps 2^-3, target 2^15) that is spread/128 vs spread/120 —
+    within 7% of each other, NOT the naive 2x mantissa win.  e4m3's real
+    (small) benefit is fewer flushed values."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8192,)) * 1e-6
+    xn = np.asarray(x)
+
+    def stats(t):
+        t = np.asarray(t)
+        nz = t != 0
+        return (np.median(np.abs(t[nz] - xn[nz]) / np.abs(xn[nz])),
+                (~nz).mean())
+
+    e5, flush5 = stats(s2fp8.truncate_value(x))
+    e4, flush4 = stats(s2fp8.truncate_value_e4m3(x))
+    assert abs(e4 - e5) / e5 < 0.15, (e4, e5)      # equalized precision
+    assert flush4 <= flush5                         # slightly fewer flushes
+
+
+def test_e4m3_never_overflows():
+    for scale in [1e-20, 1.0, 1e20]:
+        x = jax.random.normal(jax.random.PRNGKey(1), (1024,)) * scale
+        t = np.asarray(s2fp8.truncate_value_e4m3(x))
+        assert np.isfinite(t).all()
+        assert (t != 0).mean() > 0.9
+
+
+def test_e4m3_policy_mode():
+    pol = make_policy("s2fp8_e4m3")
+    a = jax.random.normal(jax.random.PRNGKey(2), (64, 64)) * 1e-8
+    b = jax.random.normal(jax.random.PRNGKey(3), (64, 64)) * 1e-8
+    out = np.asarray(pol.dot(a, b))
+    exact = np.asarray(jnp.dot(a, b))
+    assert np.corrcoef(out.ravel(), exact.ravel())[0, 1] > 0.99
+    # gradient path flows
+    g = jax.grad(lambda a_: jnp.sum(pol.dot(a_, b) ** 2))(a)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_bf16_moments_halve_state_and_still_learn():
+    opt32 = optimizers.adamw()
+    opt16 = optimizers.adamw(moment_dtype=jnp.bfloat16)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (128, 64))}
+    s32, s16 = opt32.init(params), opt16.init(params)
+    assert s16.m["w"].dtype == jnp.bfloat16
+    assert s16.m["w"].nbytes == s32.m["w"].nbytes // 2
+
+    # a few steps on a quadratic: both must reduce the loss similarly
+    target = jax.random.normal(jax.random.PRNGKey(5), (128, 64))
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    p32, p16 = params, params
+    for step in range(20):
+        g32 = jax.grad(loss)(p32)
+        g16 = jax.grad(loss)(p16)
+        p32, s32 = opt32.update(g32, s32, p32, 1e-2)
+        p16, s16 = opt16.update(g16, s16, p16, 1e-2)
+    l32, l16 = float(loss(p32)), float(loss(p16))
+    assert l16 < float(loss(params)) * 0.9
+    assert abs(l16 - l32) / l32 < 0.05

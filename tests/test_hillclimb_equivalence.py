@@ -1,0 +1,88 @@
+"""Every §Perf optimization must be numerically equivalent to its baseline
+(same math, different schedule) — these tests pin that invariant."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.policy import make_policy
+from repro.models import blocks
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+POL = make_policy("fp32")
+
+
+def test_mamba2_ssd_equals_step_scan():
+    cfg = get_reduced_config("zamba2_1p2b").replace(activation_dtype="float32")
+    p = blocks.init_block("mamba2", cfg, KEY)
+    x = jax.random.normal(KEY, (2, 128, cfg.d_model)) * 0.1
+    pos = jnp.arange(128)
+    y0, _, _ = blocks.block_apply("mamba2", p, x, cfg, POL, pos, None, 0, "train")
+    y1, _, _ = blocks.block_apply("mamba2", p, x, cfg.replace(ssm_impl="ssd"),
+                                  POL, pos, None, 0, "train")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mamba2_ssd_gradients_match():
+    cfg = get_reduced_config("zamba2_1p2b").replace(activation_dtype="float32")
+    p = blocks.init_block("mamba2", cfg, KEY)
+    x = jax.random.normal(KEY, (1, 64, cfg.d_model)) * 0.1
+    pos = jnp.arange(64)
+
+    def loss(impl):
+        c = cfg.replace(ssm_impl=impl)
+        return lambda xx: jnp.sum(
+            blocks.block_apply("mamba2", p, xx, c, POL, pos, None, 0,
+                               "train")[0] ** 2)
+
+    g0 = jax.grad(loss("step"))(x)
+    g1 = jax.grad(loss("ssd"))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g0),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_mamba1_unroll8_exact():
+    cfg = get_reduced_config("falcon_mamba_7b").replace(
+        activation_dtype="float32")
+    p = blocks.init_block("mamba1", cfg, KEY)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model)) * 0.1
+    pos = jnp.arange(64)
+    y0, _, _ = blocks.block_apply("mamba1", p, x, cfg, POL, pos, None, 0, "train")
+    y1, _, _ = blocks.block_apply("mamba1", p, x,
+                                  cfg.replace(ssm_impl="unroll8"),
+                                  POL, pos, None, 0, "train")
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_moe_grouped_equals_global_when_capacity_ample():
+    cfg = get_reduced_config("deepseek_moe_16b").replace(
+        activation_dtype="float32")
+    p = blocks.init_block("moe", cfg, KEY)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model)) * 0.5
+    pos = jnp.arange(64)
+    y0, _, a0 = blocks.block_apply("moe", p, x, cfg, POL, pos, None, 0, "train")
+    cfg_g = cfg.replace(moe=dataclasses.replace(cfg.moe, routing="grouped"))
+    y1, _, a1 = blocks.block_apply("moe", p, x, cfg_g, POL, pos, None, 0, "train")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(a1), float(a0), rtol=1e-5)
+
+
+def test_bf16_output_dtype_close():
+    """output_dtype=bf16 (collective lever) must stay within bf16 rounding
+    of the f32-output policy on a GEMM chain."""
+    pol32 = make_policy("fp32")
+    pol16 = dataclasses.replace(pol32, output_dtype="bfloat16")
+    a = jax.random.normal(KEY, (64, 128)) * 0.3
+    w1 = jax.random.normal(jax.random.fold_in(KEY, 1), (128, 256)) * 0.1
+    w2 = jax.random.normal(jax.random.fold_in(KEY, 2), (256, 32)) * 0.1
+    y32 = pol32.dot(pol32.dot(a, w1), w2)
+    y16 = pol16.dot(pol16.dot(a, w1), w2)
+    np.testing.assert_allclose(np.asarray(y16, np.float32), np.asarray(y32),
+                               rtol=0.03, atol=0.03)

@@ -1,0 +1,94 @@
+"""Numeric policy: GEMM wrapping semantics per mode (paper Fig. 4 dataflow)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import s2fp8
+from repro.core.policy import MODES, Policy, make_policy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_fp32_is_exact():
+    a = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    np.testing.assert_array_equal(np.asarray(make_policy("fp32").dot(a, b)),
+                                  np.asarray(jnp.dot(a, b)))
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError):
+        make_policy("int4")
+
+
+@pytest.mark.parametrize("mode", ["s2fp8", "bf16"])
+def test_dot_close_for_sane_scales(mode):
+    a = jax.random.normal(jax.random.PRNGKey(2), (64, 128)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(3), (128, 32)) * 0.1
+    out = np.asarray(make_policy(mode).dot(a, b))
+    exact = np.asarray(jnp.dot(a, b))
+    denom = np.abs(exact) + np.abs(exact).mean()
+    assert np.median(np.abs(out - exact) / denom) < 0.06
+
+
+def test_s2fp8_survives_extreme_scales_fp8_does_not():
+    """The paper's core mechanism at op level: gradients of magnitude 1e-8
+    vanish under raw FP8 but survive S2FP8."""
+    a = jax.random.normal(jax.random.PRNGKey(4), (64, 64)) * 1e-8
+    b = jax.random.normal(jax.random.PRNGKey(5), (64, 64)) * 1e-8
+    exact = np.asarray(jnp.dot(a, b))
+    s2 = np.asarray(make_policy("s2fp8").dot(a, b))
+    raw = np.asarray(make_policy("fp8").dot(a, b))
+    assert np.all(raw == 0.0)                      # FP8 flushes everything
+    corr = np.corrcoef(s2.ravel(), exact.ravel())[0, 1]
+    assert corr > 0.99
+
+
+def test_backward_gradients_truncated_s2fp8():
+    """dX through a policy dot must be S2FP8-truncated (Fig. 4 backward)."""
+    pol = make_policy("s2fp8")
+    a = jax.random.normal(jax.random.PRNGKey(6), (16, 32))
+    b = jax.random.normal(jax.random.PRNGKey(7), (32, 8))
+    cot = jax.random.normal(jax.random.PRNGKey(8), (16, 8)) * 1e-9
+
+    def f(a_):
+        return pol.dot(a_, b)
+
+    _, vjp = jax.vjp(f, a)
+    (da,) = vjp(cot)
+    # gradient flows and is finite (raw fp8 would flush cot to exactly 0)
+    assert np.isfinite(np.asarray(da)).all()
+    assert np.abs(np.asarray(da)).max() > 0
+
+    polraw = make_policy("fp8")
+    _, vjp_raw = jax.vjp(lambda a_: polraw.dot(a_, b), a)
+    (da_raw,) = vjp_raw(cot)
+    assert np.all(np.asarray(da_raw) == 0.0)
+
+
+def test_einsum_and_dot_general_agree():
+    pol = make_policy("s2fp8")
+    a = jax.random.normal(jax.random.PRNGKey(9), (4, 16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(10), (32, 8))
+    e = pol.einsum("bsd,df->bsf", a, w)
+    d = pol.dot(a, w)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(d), rtol=1e-5)
+
+
+def test_conv_wrapped():
+    pol = make_policy("s2fp8")
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 8, 8, 3)) * 1e-6
+    k = jax.random.normal(jax.random.PRNGKey(12), (3, 3, 3, 4)) * 1e-6
+    out = np.asarray(pol.conv(x, k))
+    exact = np.asarray(make_policy("fp32").conv(x, k))
+    corr = np.corrcoef(out.ravel(), exact.ravel())[0, 1]
+    assert corr > 0.99
+    raw = np.asarray(make_policy("fp8").conv(x, k))
+    assert np.all(raw == 0.0)
+
+
+def test_loss_scale_carried():
+    pol = make_policy("fp8_ls", loss_scale=128.0)
+    assert pol.loss_scale == 128.0
+    assert pol.mode == "fp8_ls"
