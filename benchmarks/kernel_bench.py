@@ -1,29 +1,101 @@
 """Microbenchmarks for the S2FP8 numeric layer (paper §5 cost discussion).
 
-Times the jnp reference path (the CPU-executable implementation; the Pallas
-kernels are the TPU target and validate in interpret mode in tests/).
-Derived column reports achieved GB/s — the quantity §5 claims is preserved.
+Two lanes:
+
+  * the original CSV rows (jnp reference path — the CPU-executable oracle;
+    the Pallas kernels are the TPU target and validate in interpret mode
+    in tests/);
+  * the backend comparison the dispatch refactor is about: the
+    pre-refactor truncate (eager ``s2fp8.truncate_value`` — every jnp op
+    its own dispatch, ~five passes over the tensor, which is what
+    non-jitted ``Policy`` callers paid per tensor) vs the backend's fused
+    truncate (two compiled programs: stats reduction + fused
+    apply->RNE->inverse) and the delayed-stats path (one elementwise
+    program, no reduction).  A jitted four-program staged lane is also
+    recorded as the compiled-vs-compiled baseline.  Results land in
+    ``BENCH_kernels.json``.
+
+On TPU the same entry points route to the compiled Pallas kernels; the
+interpreter is debug-grade, so off-TPU the fused lane times the ref
+backend (identical op graph, XLA-fused).
 """
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.bench_util import emit, time_jitted
-from repro.core import s2fp8
+from repro.core import backend as nbackend
+from repro.core import fp8, s2fp8
 from repro.kernels import ref
+
+BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+
+
+def bench_truncate(results):
+    key = jax.random.PRNGKey(0)
+    be = nbackend.get_backend()           # platform default backend
+    stats_j = jax.jit(s2fp8.compute_stats)
+    fwd_j = jax.jit(s2fp8._forward_map)
+    rne_j = jax.jit(fp8.truncate_e5m2)
+    inv_j = jax.jit(s2fp8._inverse_map)
+
+    def eager_ref(v):
+        # pre-refactor execution: op-by-op dispatch, ~5 tensor passes
+        return s2fp8.truncate_value(v)
+
+    def staged_jit(v):
+        # compiled-vs-compiled baseline: each Eq. 5 stage its own program
+        a, b = stats_j(v)
+        return inv_j(rne_j(fwd_j(v, a, b)), a, b)
+
+    def fused(v):
+        # the backend path: stats program + fused apply program
+        return be.truncate(v)
+
+    for n in [1 << 16, 1 << 20, 1 << 22]:
+        x = jax.random.normal(key, (n,)) * 1e-5
+        ref_us = time_jitted(eager_ref, x)
+        staged_us = time_jitted(staged_jit, x)
+        fused_us = time_jitted(fused, x)
+        stats = be.compute_stats(x)
+        delayed_us = time_jitted(lambda v: be.truncate(v, stats=stats), x)
+        gbs = n * 4 / (fused_us * 1e-6) / 1e9
+        emit(f"s2fp8_truncate_ref_n{n}", ref_us,
+             f"{n*4/(ref_us*1e-6)/1e9:.2f}GB/s")
+        emit(f"s2fp8_truncate_staged_n{n}", staged_us,
+             f"{n*4/(staged_us*1e-6)/1e9:.2f}GB/s")
+        emit(f"s2fp8_truncate_fused_n{n}", fused_us, f"{gbs:.2f}GB/s")
+        emit(f"s2fp8_truncate_delayed_n{n}", delayed_us,
+             f"{n*4/(delayed_us*1e-6)/1e9:.2f}GB/s")
+        results["truncate"].append({
+            "n": n, "backend": be.name,
+            # pre-refactor eager execution (what non-jitted Policy ops paid)
+            "ref_us": ref_us,
+            # compiled four-program chain (jitted pre-refactor structure)
+            "ref_staged_jit_us": staged_us,
+            "fused_us": fused_us,
+            "delayed_stats_us": delayed_us,
+            "fused_speedup": ref_us / fused_us,
+            "fused_vs_staged": staged_us / fused_us,
+        })
 
 
 def main():
+    results = {"backend": nbackend.get_backend().name,
+               "platform": jax.default_backend(),
+               "truncate": [], "quantize": [], "matmul": []}
     key = jax.random.PRNGKey(0)
+
+    bench_truncate(results)
+
     for n in [1 << 16, 1 << 20, 1 << 22]:
         x = jax.random.normal(key, (n,)) * 1e-5
-        f = jax.jit(s2fp8.truncate_value)
-        us = time_jitted(f, x)
-        gbs = n * 4 / (us * 1e-6) / 1e9
-        emit(f"s2fp8_truncate_n{n}", us, f"{gbs:.2f}GB/s")
-
         fq = jax.jit(lambda v: s2fp8.quantize(v).payload)
         us = time_jitted(fq, x)
         emit(f"s2fp8_quantize_n{n}", us, f"{n*4/(us*1e-6)/1e9:.2f}GB/s")
+        results["quantize"].append({"n": n, "us": us})
 
     for m, k, n2 in [(512, 512, 512), (1024, 1024, 1024)]:
         a = jax.random.normal(key, (m, k)) * 1e-3
@@ -34,12 +106,18 @@ def main():
         us = time_jitted(f, pa, aa, ab, pb, ba, bb)
         gflops = 2 * m * k * n2 / (us * 1e-6) / 1e9
         emit(f"s2fp8_matmul_{m}x{k}x{n2}", us, f"{gflops:.1f}GFLOP/s")
+        results["matmul"].append({"mkn": [m, k, n2], "us": us,
+                                  "gflops": gflops})
 
     q = jax.random.normal(key, (1, 4, 1024, 64))
     kv = jax.random.normal(key, (1, 4, 1024, 64))
     f = jax.jit(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=True))
     us = time_jitted(f, q, kv, kv)
     emit("attention_ref_1k", us, "oracle")
+
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(results, fh, indent=2)
+    print(f"# wrote {BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -94,6 +94,10 @@ class ArchConfig:
     # numerics / memory
     activation_dtype: str = "bfloat16"
     param_dtype: str = "float32"
+    # Numerics backend for the S2FP8 truncations (core/backend.py registry):
+    # "auto" -> fused Pallas kernels on TPU, pure-jnp ref elsewhere.  Both
+    # are bitwise-identical; launchers may override with --backend.
+    numerics_backend: str = "auto"
     remat: bool = True
     # attention autodiff schedule for long sequences:
     #   "naive" — chunked scan, linearized residuals (paper-era baseline)

@@ -1,0 +1,305 @@
+"""Numerics-backend registry: one interface, swappable engines.
+
+Every S2FP8 operation the framework performs — stats, quantize, dequantize,
+the Eq. 5 truncation that ``Policy`` wraps around each GEMM, and the
+payload-domain GEMM — goes through a :class:`NumericsBackend`.  Two engines
+ship:
+
+  * ``"ref"``    — the pure-jnp implementation in core/s2fp8.py (today's
+    semantics, the semantic ground truth, and the fast CPU path);
+  * ``"pallas"`` — the fused Pallas kernels in kernels/ via the
+    shape-generalizing dispatch layer (kernels/dispatch.py).  Its default
+    stats mode computes (alpha, beta) with the same monolithic reduction
+    the ref uses and fuses apply->FP8-RNE->inverse into one elementwise
+    kernel — bitwise-identical outputs, two HBM passes instead of five.
+    ``PallasBackend(stats_mode="fused")`` moves the stats reduction
+    in-kernel as well (single two-phase ``pallas_call``; float-tolerance
+    parity).
+
+``"auto"`` resolves to ``"pallas"`` on TPU and ``"ref"`` elsewhere; the
+``Policy`` dataclass carries the selection (core/policy.py), the launchers
+expose it as ``--backend``, and ArchConfig carries a per-arch default.
+
+Delayed-stats mode: every backend's ``truncate`` accepts precomputed
+``stats=(alpha, beta)``.  :func:`truncate_delayed` and
+:class:`DelayedStatsCache` build the two idioms on top — a functional
+carry for jitted loops (refresh the reduction every k steps, reuse the
+scalars in between) and a host-side keyed cache for eager callers
+(serving, checkpoint compression).  Tensor distributions drift slowly
+between adjacent steps (the premise behind amortized scaling in FP8
+training recipes), so stale-by-k stats cost little accuracy while removing
+the stats reduction — the only non-elementwise pass — from the hot loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import s2fp8
+from repro.core.s2fp8 import S2FP8Tensor
+
+_TARGET_MAX = s2fp8.FMT_TARGET_MAX
+
+
+class NumericsBackend:
+    """Interface every numerics engine implements.
+
+    ``stats`` arguments/returns are (alpha, beta) f32 scalar pairs;
+    ``fmt`` selects the payload format ("e5m2" — the paper's — or "e4m3").
+    """
+
+    name = "abstract"
+
+    def compute_stats(self, x: jnp.ndarray, *, fmt: str = "e5m2"
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def quantize(self, x: jnp.ndarray) -> S2FP8Tensor:
+        raise NotImplementedError
+
+    def dequantize(self, t: S2FP8Tensor, dtype=jnp.float32) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def truncate(self, x: jnp.ndarray, *, stats=None,
+                 fmt: str = "e5m2") -> jnp.ndarray:
+        raise NotImplementedError
+
+    def qmatmul(self, a: S2FP8Tensor, b: S2FP8Tensor) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<NumericsBackend {self.name!r}>"
+
+
+def _make_ref_truncate():
+    # one jitted program over the existing oracle — no second fmt dispatch
+    from repro.kernels import ref
+    return jax.jit(ref.s2fp8_truncate_ref, static_argnames=("fmt",))
+
+
+_ref_truncate = _make_ref_truncate()
+
+
+class RefBackend(NumericsBackend):
+    """Pure-jnp reference engine (core/s2fp8.py + kernels/ref.py).
+
+    ``compute_stats`` and ``truncate`` each run as one jitted program —
+    the execution shape every real caller (jitted train/eval steps) sees.
+    This pins down ONE set of XLA fusion/FMA decisions per stage, which is
+    what makes ref-vs-pallas bitwise parity well-defined: op-by-op eager
+    dispatch of the same chain differs from any compiled version by 1-ulp
+    FMA rounding.
+    """
+
+    name = "ref"
+
+    def compute_stats(self, x, *, fmt: str = "e5m2"):
+        return s2fp8.compute_stats_jit(x, target_max=_TARGET_MAX[fmt])
+
+    def quantize(self, x):
+        return s2fp8.quantize(x)
+
+    def dequantize(self, t, dtype=jnp.float32):
+        return s2fp8.dequantize(t, dtype)
+
+    def truncate(self, x, *, stats=None, fmt: str = "e5m2"):
+        if stats is None:
+            stats = self.compute_stats(x, fmt=fmt)
+        return _ref_truncate(x, stats, fmt=fmt)
+
+    def qmatmul(self, a, b):
+        from repro.kernels import ref
+        return ref.s2fp8_matmul_ref(a.payload, a.alpha, a.beta,
+                                    b.payload, b.alpha, b.beta)
+
+
+class PallasBackend(NumericsBackend):
+    """Fused Pallas-kernel engine via kernels/dispatch.py.
+
+    ``stats_mode``:
+      * "exact" (default) — (alpha, beta) from the same monolithic jnp
+        reduction the ref uses; truncation output is bitwise-identical to
+        the ref backend (including under interpret mode off-TPU).
+      * "fused"           — in-kernel blocked stats reduction (the
+        two-phase single-kernel path); float-tolerance parity.
+    ``interpret=None`` auto-detects the platform per call.
+    """
+
+    name = "pallas"
+
+    def __init__(self, *, stats_mode: str = "exact",
+                 interpret: Optional[bool] = None, block=None,
+                 name: Optional[str] = None):
+        if stats_mode not in ("exact", "fused"):
+            raise ValueError(f"stats_mode must be 'exact' or 'fused', "
+                             f"got {stats_mode!r}")
+        from repro.kernels.s2fp8_quant import DEFAULT_BLOCK
+        self.stats_mode = stats_mode
+        self.interpret = interpret
+        self.block = DEFAULT_BLOCK if block is None else block
+        if name is not None:
+            self.name = name
+
+    def compute_stats(self, x, *, fmt: str = "e5m2"):
+        from repro.kernels import dispatch
+        if self.stats_mode == "exact":
+            # Same compiled program as RefBackend — the bitwise-parity anchor.
+            return s2fp8.compute_stats_jit(x, target_max=_TARGET_MAX[fmt])
+        return dispatch.stats_nd(x, target_max=_TARGET_MAX[fmt],
+                                 block=self.block, interpret=self.interpret)
+
+    def quantize(self, x):
+        from repro.kernels import dispatch
+        # exact mode: stats from the shared compiled reduction, so stored
+        # (alpha, beta) match RefBackend.quantize and this backend's own
+        # compute_stats bit-for-bit; fused mode keeps the reduction in-kernel
+        stats = (s2fp8.compute_stats_jit(x) if self.stats_mode == "exact"
+                 else None)
+        payload, alpha, beta = dispatch.quant_nd(x, stats=stats,
+                                                 block=self.block,
+                                                 interpret=self.interpret)
+        return S2FP8Tensor(payload=payload, alpha=alpha, beta=beta)
+
+    def dequantize(self, t, dtype=jnp.float32):
+        from repro.kernels import dispatch
+        return dispatch.dequant_nd(t.payload, t.alpha, t.beta, dtype=dtype,
+                                   block=self.block, interpret=self.interpret)
+
+    def truncate(self, x, *, stats=None, fmt: str = "e5m2"):
+        from repro.kernels import dispatch
+        # stats=None + fused_stats=False -> truncate_nd's default branch
+        # computes exact stats via the shared compute_stats_jit program
+        return dispatch.truncate_nd(x, stats=stats, fmt=fmt,
+                                    fused_stats=(self.stats_mode == "fused"),
+                                    block=self.block, interpret=self.interpret)
+
+    def qmatmul(self, a, b):
+        from repro.kernels import dispatch
+        return dispatch.qmatmul_nd(a.payload, a.alpha, a.beta,
+                                   b.payload, b.alpha, b.beta,
+                                   interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, NumericsBackend] = {}
+
+
+def register_backend(name: str, backend: NumericsBackend,
+                     overwrite: bool = False) -> NumericsBackend:
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered; "
+                         f"pass overwrite=True to replace it")
+    _REGISTRY[name] = backend
+    return backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def default_backend_name() -> str:
+    """Platform default: the fused kernels where they compile, ref elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def get_backend(name: Optional[str] = None) -> NumericsBackend:
+    """Resolve a backend by name; ``None``/"auto" picks the platform default."""
+    if name is None or name == "auto":
+        name = default_backend_name()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown numerics backend {name!r}; "
+                       f"registered: {available_backends()}") from None
+
+
+register_backend("ref", RefBackend())
+register_backend("pallas", PallasBackend())
+register_backend("pallas_fused", PallasBackend(stats_mode="fused",
+                                               name="pallas_fused"))
+
+
+# ---------------------------------------------------------------------------
+# differentiable truncations (paper Fig. 4 wiring), per backend
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def bidir_truncate(backend: Optional[str] = None, fmt: str = "e5m2"):
+    """Backend-routed analogue of ``s2fp8.truncate_bidir``: Eq. 5 on the
+    forward value AND on the cotangent.  Cached per (backend, fmt) so the
+    returned callable is a stable object under repeated jit tracing; the
+    NAME is cached, not the engine — resolution happens per call, so
+    ``register_backend(..., overwrite=True)`` takes effect immediately."""
+
+    @jax.custom_vjp
+    def _trunc(x):
+        return get_backend(backend).truncate(x, fmt=fmt)
+
+    def _fwd(x):
+        return get_backend(backend).truncate(x, fmt=fmt), None
+
+    def _bwd(_, g):
+        return (get_backend(backend).truncate(g, fmt=fmt),)
+
+    _trunc.defvjp(_fwd, _bwd)
+    return _trunc
+
+
+# ---------------------------------------------------------------------------
+# delayed stats
+# ---------------------------------------------------------------------------
+
+def truncate_delayed(x: jnp.ndarray, stats, *, refresh=False,
+                     backend: Optional[str] = None, fmt: str = "e5m2"):
+    """Functional delayed-stats truncation for jitted loops.
+
+    Returns ``(truncated, stats_used)``.  Callers thread ``stats_used``
+    into the next step; pass ``refresh=True`` (a Python bool, e.g.
+    ``step % k == 0`` resolved outside jit or via two jitted branches)
+    every k steps to recompute the reduction.  ``stats=None`` always
+    refreshes.
+    """
+    be = get_backend(backend)
+    if refresh or stats is None:
+        stats = be.compute_stats(x, fmt=fmt)
+    return be.truncate(x, stats=stats, fmt=fmt), stats
+
+
+class DelayedStatsCache:
+    """Host-side keyed (alpha, beta) cache for eager callers.
+
+    ``cache.truncate(x, key, step)`` reuses the stats stored under ``key``
+    and refreshes them every ``refresh_every`` steps — between refreshes
+    the truncation is a single elementwise pass (no reduction).
+    """
+
+    def __init__(self, backend: Optional[str] = None,
+                 refresh_every: int = 16, fmt: str = "e5m2"):
+        if refresh_every < 1:
+            raise ValueError("refresh_every must be >= 1")
+        self.backend = backend
+        self.refresh_every = refresh_every
+        self.fmt = fmt
+        self._stats: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        self._last_refresh: Dict[str, int] = {}
+
+    def truncate(self, x: jnp.ndarray, key: str, step: int) -> jnp.ndarray:
+        refresh = (key not in self._stats or
+                   step - self._last_refresh[key] >= self.refresh_every)
+        out, stats = truncate_delayed(x, self._stats.get(key),
+                                      refresh=refresh, backend=self.backend,
+                                      fmt=self.fmt)
+        if refresh:
+            self._stats[key] = stats
+            self._last_refresh[key] = step
+        return out
+
+    def clear(self):
+        self._stats.clear()
+        self._last_refresh.clear()

@@ -14,6 +14,11 @@ object selects between:
 Models never reference numerics directly — they call ``policy.dot`` /
 ``policy.einsum`` / ``policy.conv`` and get the right dataflow, so every
 architecture in configs/ is numerics-agnostic.
+
+The s2fp8 truncations are routed through the numerics-backend registry
+(core/backend.py): ``backend="ref"`` is the pure-jnp path, ``"pallas"``
+the fused-kernel path (bitwise-identical by construction), and the
+default ``"auto"`` picks pallas on TPU, ref elsewhere.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as nbackend
 from repro.core import s2fp8
 
 MODES = ("fp32", "bf16", "fp8", "fp8_ls", "s2fp8", "s2fp8_e4m3")
@@ -55,18 +61,31 @@ class Policy:
     # all-reduces then move half the bytes (hillclimb lever; EXPERIMENTS.md
     # §Perf documents the trade).
     output_dtype: Optional[str] = None
+    # Numerics backend for the s2fp8 truncations (core/backend.py registry).
+    # "auto" -> pallas on TPU, ref elsewhere; both produce bitwise-identical
+    # truncations, so the choice is an execution detail, not a semantic one.
+    backend: str = "auto"
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"unknown numeric mode {self.mode!r}; want one of {MODES}")
+        if self.backend != "auto" and \
+                self.backend not in nbackend.available_backends():
+            raise ValueError(
+                f"unknown numerics backend {self.backend!r}; registered: "
+                f"{('auto',) + nbackend.available_backends()}")
 
     # -- operand / output transforms ------------------------------------
     @property
+    def backend_obj(self) -> "nbackend.NumericsBackend":
+        return nbackend.get_backend(self.backend)
+
+    @property
     def _wrap(self) -> Callable:
         if self.mode == "s2fp8":
-            return s2fp8.truncate_bidir
+            return nbackend.bidir_truncate(self.backend, "e5m2")
         if self.mode == "s2fp8_e4m3":
-            return s2fp8.truncate_bidir_e4m3
+            return nbackend.bidir_truncate(self.backend, "e4m3")
         if self.mode in ("fp8", "fp8_ls"):
             return s2fp8.fp8_truncate_bidir
         if self.mode == "bf16":
@@ -120,6 +139,26 @@ class Policy:
         )
         return self._wrap_out(y).astype(x.dtype)
 
+    def qdot(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Payload-domain GEMM: quantize both operands to S2FP8 storage and
+        run the backend's fused dequant-matmul (the paper §5 "tensor
+        processing engine" — operands stream at 1 byte/element).  Forward
+        value only (no custom VJP): intended for inference/serving paths;
+        training GEMMs go through ``dot``'s Fig. 4 wrapping."""
+        if self.mode == "s2fp8_e4m3":
+            # storage payloads are e5m2-only today (ROADMAP: e4m3 backend
+            # parity) — refuse rather than silently compute in e5m2
+            raise NotImplementedError(
+                "qdot has no e4m3 storage path yet; use mode='s2fp8' or dot()")
+        if self.mode != "s2fp8":
+            return self.dot(a, b)
+        be = self.backend_obj
+        y = be.qmatmul(be.quantize(a), be.quantize(b))
+        return self._wrap_out(y).astype(a.dtype)
 
-def make_policy(mode: str, loss_scale: Optional[float] = None) -> Policy:
-    return Policy(mode=mode, loss_scale=loss_scale if loss_scale is not None else 1.0)
+
+def make_policy(mode: str, loss_scale: Optional[float] = None,
+                backend: Optional[str] = None) -> Policy:
+    return Policy(mode=mode,
+                  loss_scale=loss_scale if loss_scale is not None else 1.0,
+                  backend=backend or "auto")

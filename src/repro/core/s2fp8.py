@@ -36,10 +36,11 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fp8
 
@@ -53,6 +54,13 @@ TARGET_MAX_LOG2_E4M3 = 8.0
 # Guard for degenerate tensors where max(log2|X|) == mean(log2|X|)
 # (constant-magnitude tensors): fall back to a pure shift (alpha = 1).
 _DEGENERATE_EPS = 1e-6
+
+# One table per payload format — the single source the backend registry
+# (core/backend.py), the dispatch layer and the Pallas kernels all read,
+# so adding a format is a one-place change.
+FMT_TARGET_MAX = {"e5m2": TARGET_MAX_LOG2, "e4m3": TARGET_MAX_LOG2_E4M3}
+FMT_QDTYPE = {"e5m2": jnp.float8_e5m2, "e4m3": jnp.float8_e4m3fn}
+FMT_MAX_FINITE = {"e5m2": fp8.E5M2_MAX, "e4m3": fp8.E4M3_MAX}
 
 
 @jax.tree_util.register_pytree_node_class
@@ -70,8 +78,9 @@ class S2FP8Tensor:
 
     @property
     def nbytes_payload(self) -> int:
-        import numpy as np
-        return int(np.prod(self.payload.shape)) + 8
+        """Wire size: 1 byte per element plus one (alpha, beta) f32 pair —
+        8 bytes total for the two stats, counted once per tensor."""
+        return int(np.prod(self.payload.shape, dtype=np.int64)) + 8
 
     def tree_flatten(self):
         return (self.payload, self.alpha, self.beta), None
@@ -81,33 +90,47 @@ class S2FP8Tensor:
         return cls(*children)
 
 
-def compute_stats(x: jnp.ndarray,
-                  target_max: float = TARGET_MAX_LOG2) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Return (alpha, beta) per paper Eq. 3–4, ignoring zero elements.
+def stats_from_reduction(log_sum, log_max, count,
+                         target_max: float = TARGET_MAX_LOG2
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scalar epilogue mapping the raw reduction (sum log2|X|, max log2|X|,
+    nonzero count) to (alpha, beta) per paper Eq. 3–4.  Shared by the jnp
+    path, the Pallas stats kernel and the fused truncate kernel so every
+    backend agrees on the degenerate-case conventions:
 
-    Degenerate cases:
       * all-zero tensor      -> identity transform (alpha=1, beta=0)
       * constant |X| (m==mu) -> pure shift pinning the max at 2^target_max
     """
+    mu = log_sum / jnp.maximum(count, 1.0)
+    spread = log_max - mu
+    degenerate = spread < _DEGENERATE_EPS
+    alpha = jnp.where(degenerate, 1.0, target_max / jnp.where(degenerate, 1.0, spread))
+    beta = jnp.where(degenerate, target_max - log_max, -alpha * mu)
+    empty = count == 0
+    alpha = jnp.where(empty, 1.0, alpha)
+    beta = jnp.where(empty, 0.0, beta)
+    return alpha.astype(jnp.float32), beta.astype(jnp.float32)
+
+
+def compute_stats(x: jnp.ndarray,
+                  target_max: float = TARGET_MAX_LOG2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (alpha, beta) per paper Eq. 3–4, ignoring zero elements."""
     x = x.astype(jnp.float32)
     absx = jnp.abs(x)
     nonzero = absx > 0.0
     logx = jnp.where(nonzero, jnp.log2(jnp.where(nonzero, absx, 1.0)), 0.0)
     count = jnp.sum(nonzero)
-    safe_count = jnp.maximum(count, 1)
-    mu = jnp.sum(logx) / safe_count
-    m = jnp.max(jnp.where(nonzero, logx, -jnp.inf))
+    log_sum = jnp.sum(logx)
+    log_max = jnp.max(jnp.where(nonzero, logx, -jnp.inf))
+    return stats_from_reduction(log_sum, log_max,
+                                count.astype(jnp.float32), target_max)
 
-    spread = m - mu
-    degenerate = spread < _DEGENERATE_EPS
-    alpha = jnp.where(degenerate, 1.0, target_max / jnp.where(degenerate, 1.0, spread))
-    beta = jnp.where(degenerate, target_max - m, -alpha * mu)
 
-    # All-zero tensor: identity (payload stays all-zero either way).
-    empty = count == 0
-    alpha = jnp.where(empty, 1.0, alpha)
-    beta = jnp.where(empty, 0.0, beta)
-    return alpha.astype(jnp.float32), beta.astype(jnp.float32)
+# One jitted program for the stats reduction, shared by every backend
+# (core/backend.py): alpha/beta must come from the SAME compiled program on
+# both sides of a ref-vs-pallas comparison, or XLA's per-program fusion/FMA
+# choices shift them by 1 ulp and break bitwise parity downstream.
+compute_stats_jit = jax.jit(compute_stats, static_argnames=("target_max",))
 
 
 def _forward_map(x: jnp.ndarray, alpha, beta) -> jnp.ndarray:
@@ -141,20 +164,31 @@ def dequantize(t: S2FP8Tensor, dtype=jnp.float32) -> jnp.ndarray:
     return _inverse_map(t.payload.astype(jnp.float32), t.alpha, t.beta).astype(dtype)
 
 
-def truncate_value(x: jnp.ndarray) -> jnp.ndarray:
-    """Paper Eq. 5: the pure value semantics of the S2FP8 round-trip."""
-    alpha, beta = compute_stats(x)
+def truncate_value(x: jnp.ndarray, stats: Optional[Tuple] = None) -> jnp.ndarray:
+    """Paper Eq. 5: the pure value semantics of the S2FP8 round-trip.
+
+    ``stats=(alpha, beta)`` skips the reduction — the delayed-stats hook
+    used by core/backend.py to amortize the stats pass across steps.  The
+    forward image is clamped at the e5m2 max finite: a no-op for fresh
+    stats (|Y| <= 2^15 by construction) but it turns stale-stats overflow
+    (delayed mode, tensor drifted upward) into saturation instead of inf.
+    """
+    alpha, beta = compute_stats(x) if stats is None else stats
     y = _forward_map(x.astype(jnp.float32), alpha, beta)
+    y = jnp.clip(y, -fp8.E5M2_MAX, fp8.E5M2_MAX)
     yq = fp8.truncate_e5m2(y)
     return _inverse_map(yq, alpha, beta).astype(x.dtype)
 
 
-def truncate_value_e4m3(x: jnp.ndarray) -> jnp.ndarray:
+def truncate_value_e4m3(x: jnp.ndarray, stats: Optional[Tuple] = None) -> jnp.ndarray:
     """S2FP8-e4m3 ablation (paper §6 future work): one more mantissa bit
     (eps 2^-4), range pinned at 2^8 — for narrow-distribution tensors the
     squeeze absorbs the range loss and precision improves ~2x."""
-    alpha, beta = compute_stats(x, target_max=TARGET_MAX_LOG2_E4M3)
+    if stats is None:
+        stats = compute_stats(x, target_max=TARGET_MAX_LOG2_E4M3)
+    alpha, beta = stats
     y = _forward_map(x.astype(jnp.float32), alpha, beta)
+    y = jnp.clip(y, -fp8.E4M3_MAX, fp8.E4M3_MAX)
     yq = fp8.truncate_e4m3(y)
     return _inverse_map(yq, alpha, beta).astype(x.dtype)
 

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer: Pallas TPU kernels (s2fp8_quant, s2fp8_matmul,
+# flash_attention, selective_scan), their pure-jnp oracles (ref.py), the
+# shape/rank-generalizing dispatch layer (dispatch.py), and the public
+# jit'd wrappers (ops.py).  See README.md in this directory for how the
+# numerics-backend registry in core/backend.py selects between them.
+import jax
+
+
+def auto_interpret() -> bool:
+    """Resolve ``interpret=None`` on a Pallas kernel: compile on TPU,
+    fall back to the (slow, debug-grade) interpreter everywhere else."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,193 @@
+"""Shape/rank-generalizing dispatch for the S2FP8 Pallas kernels.
+
+The raw kernels in s2fp8_quant.py / s2fp8_matmul.py are deliberately strict:
+2-D, block-divisible inputs only (that is the shape the TPU wants).  Real
+tensors are none of those things — conv kernels are 4-D, bias rows are 1-D,
+vocab projections are 50257-wide.  This layer closes the gap:
+
+  * arbitrary rank  — tensors are flattened and re-tiled to a (rows, LANE)
+    2-D layout (LANE = 512, a multiple of the 128-lane VPU width);
+  * ragged shapes   — zero-padded up to the block grid.  Zero is the one
+    value S2FP8 treats specially everywhere (excluded from stats, mapped to
+    itself by both transforms), so zero-padding is exact: padding never
+    perturbs stats, truncation, or GEMM results;
+  * platform        — ``interpret=None`` resolves via
+    ``repro.kernels.auto_interpret()`` (compiled on TPU, interpreter
+    elsewhere);
+  * stats modes     — every truncate entry point accepts precomputed
+    ``stats=(alpha, beta)`` (the delayed-stats fast path: one HBM pass) or
+    computes them, either exactly (same monolithic reduction as the
+    reference — bitwise-parity mode) or in-kernel (``fused_stats=True``,
+    the two-phase single-kernel path).
+
+core/backend.py builds the user-facing backend objects on top of these.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import s2fp8
+from repro.kernels import auto_interpret
+from repro.kernels.s2fp8_matmul import s2fp8_matmul_pallas
+from repro.kernels.s2fp8_quant import (DEFAULT_BLOCK, dequant_pallas,
+                                       quant_apply_pallas, quant_pallas,
+                                       stats_pallas, truncate_apply_pallas,
+                                       truncate_fused_pallas)
+
+# Lane width for the flattened layout of non-2-D tensors.
+LANE = 512
+# Hardware tile alignment every block is padded to: TPU f32 tiles are
+# (8, 128) (sublane x lane); interpret mode does not care, but compiled
+# Mosaic does, so ragged shapes are padded to these multiples BEFORE the
+# block grid is derived.
+SUBLANE_ALIGN = 8
+LANE_ALIGN = 128
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def as_blocked_2d(x: jnp.ndarray, block=DEFAULT_BLOCK) -> jnp.ndarray:
+    """Reshape/zero-pad an arbitrary-rank tensor into a tile-aligned,
+    block-divisible 2-D layout the kernels accept.  Invert with
+    :func:`from_blocked_2d`."""
+    if x.ndim == 2:
+        x2 = x
+    else:
+        flat = x.reshape(-1)
+        lane = min(LANE, _ceil_to(max(flat.shape[0], 1), LANE_ALIGN))
+        flat = _pad_axis(flat, 0, _ceil_to(max(flat.shape[0], 1), lane))
+        x2 = flat.reshape(-1, lane)
+    x2 = _pad_axis(x2, 0, _ceil_to(x2.shape[0], SUBLANE_ALIGN))
+    x2 = _pad_axis(x2, 1, _ceil_to(x2.shape[1], LANE_ALIGN))
+    bm = min(block[0], x2.shape[0])
+    bn = min(block[1], x2.shape[1])
+    x2 = _pad_axis(x2, 0, _ceil_to(x2.shape[0], bm))
+    return _pad_axis(x2, 1, _ceil_to(x2.shape[1], bn))
+
+
+def from_blocked_2d(y2: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Undo :func:`as_blocked_2d`: strip padding, restore the original shape."""
+    if len(shape) == 2:
+        return y2[: shape[0], : shape[1]]
+    size = 1
+    for d in shape:
+        size *= d
+    return y2.reshape(-1)[:size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# quantization / stats
+# ---------------------------------------------------------------------------
+
+def stats_nd(x: jnp.ndarray, *, target_max: float = s2fp8.TARGET_MAX_LOG2,
+             block=DEFAULT_BLOCK, interpret: Optional[bool] = None):
+    """(alpha, beta) via the Pallas blocked reduction, any rank/shape."""
+    x2 = as_blocked_2d(x.astype(jnp.float32), block)
+    s, mx, c = stats_pallas(x2, block=block, interpret=interpret)
+    return s2fp8.stats_from_reduction(s, mx, c, target_max)
+
+
+def quant_nd(x: jnp.ndarray, *, stats=None, block=DEFAULT_BLOCK,
+             interpret: Optional[bool] = None):
+    """(payload_e5m2, alpha, beta) with payload in x's shape, any rank.
+
+    ``stats=(alpha, beta)`` skips the in-kernel reduction and quantizes
+    with the given scalars (exact-stats / delayed-stats paths).
+    """
+    x2 = as_blocked_2d(x.astype(jnp.float32), block)
+    if stats is None:
+        payload2, alpha, beta = quant_pallas(x2, block=block,
+                                             interpret=interpret)
+    else:
+        alpha, beta = stats
+        payload2 = quant_apply_pallas(x2, alpha, beta, block=block,
+                                      interpret=interpret)
+    return from_blocked_2d(payload2, x.shape), alpha, beta
+
+
+def dequant_nd(payload: jnp.ndarray, alpha, beta, *, dtype=jnp.float32,
+               block=DEFAULT_BLOCK, interpret: Optional[bool] = None):
+    """Dense tensor from an e5m2 payload of any rank."""
+    p2 = as_blocked_2d(payload, block)
+    out2 = dequant_pallas(p2, jnp.asarray(alpha, jnp.float32),
+                          jnp.asarray(beta, jnp.float32),
+                          block=block, interpret=interpret)
+    return from_blocked_2d(out2, payload.shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused truncate (Eq. 5)
+# ---------------------------------------------------------------------------
+
+def truncate_nd(x: jnp.ndarray, *, stats=None, fmt: str = "e5m2",
+                fused_stats: bool = False, block=DEFAULT_BLOCK,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused S2FP8 truncation of an arbitrary-rank tensor.
+
+    Stats selection (in priority order):
+      * ``stats=(alpha, beta)`` — delayed-stats mode: no reduction at all,
+        a single elementwise HBM pass.
+      * ``fused_stats=True``    — the two-phase single-kernel path
+        (in-kernel blocked reduction; float-tolerance parity with the ref).
+      * default                 — exact stats via the same monolithic jnp
+        reduction the reference uses, then the fused elementwise kernel:
+        bitwise-identical to ``s2fp8.truncate_value`` and still only two
+        HBM passes over the tensor.
+    """
+    target_max = s2fp8.FMT_TARGET_MAX[fmt]
+    x2 = as_blocked_2d(x.astype(jnp.float32), block)
+    if stats is None and fused_stats:
+        out2, _, _ = truncate_fused_pallas(x2, fmt=fmt, target_max=target_max,
+                                           block=block, interpret=interpret)
+    else:
+        if stats is None:
+            stats = s2fp8.compute_stats_jit(x, target_max=target_max)
+        alpha, beta = stats
+        out2 = truncate_apply_pallas(x2, alpha, beta, fmt=fmt,
+                                     block=block, interpret=interpret)
+    return from_blocked_2d(out2, x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantized GEMM
+# ---------------------------------------------------------------------------
+
+def qmatmul_nd(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta, *,
+               bm: int = 256, bk: int = 256, bn: int = 256,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """C[M,N] = dequant(A[M,K]) @ dequant(B[K,N]) for arbitrary M/K/N.
+
+    Ragged dims are zero-padded to the block grid (payload zeros dequantize
+    to 0.0, contributing nothing to the accumulation) and the result is
+    sliced back.
+    """
+    m, k = a_payload.shape
+    k2, n = b_payload.shape
+    assert k == k2, (a_payload.shape, b_payload.shape)
+    # tile alignment first (M: sublane; K: lane of A and sublane of B,
+    # so 128 covers both; N: lane), then block divisibility
+    ma, ka, na = (_ceil_to(m, SUBLANE_ALIGN), _ceil_to(k, LANE_ALIGN),
+                  _ceil_to(n, LANE_ALIGN))
+    bm_, bk_, bn_ = min(bm, ma), min(bk, ka), min(bn, na)
+    mp, kp, np_ = _ceil_to(ma, bm_), _ceil_to(ka, bk_), _ceil_to(na, bn_)
+    a_pad = _pad_axis(_pad_axis(a_payload, 0, mp), 1, kp)
+    b_pad = _pad_axis(_pad_axis(b_payload, 0, kp), 1, np_)
+    out = s2fp8_matmul_pallas(a_pad, jnp.asarray(a_alpha, jnp.float32),
+                              jnp.asarray(a_beta, jnp.float32),
+                              b_pad, jnp.asarray(b_alpha, jnp.float32),
+                              jnp.asarray(b_beta, jnp.float32),
+                              bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+    return out[:m, :n]

@@ -1,55 +1,62 @@
 """Jit'd public wrappers dispatching between Pallas kernels and jnp refs.
 
-On a real TPU runtime, set ``interpret=False`` (the default flips on TPU
-backends).  In this CPU container the kernels execute via interpret=True —
-same kernel body, Python evaluation — and the refs serve both as oracles
-and as the fast CPU path for large shapes.
+On TPU the Pallas path compiles (``interpret`` auto-resolves to False via
+``repro.kernels.auto_interpret``); elsewhere the kernels run under the
+interpreter — same kernel body, Python evaluation — and the refs serve
+both as oracles and as the fast CPU path for large shapes.
+
+Shape handling lives in kernels/dispatch.py: any rank, any (ragged) shape
+— tensors are re-tiled/zero-padded to the block grid and sliced back, so
+callers never see the kernels' 2-D block-divisible contract.  The
+backend-object layer over these functions is core/backend.py.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.s2fp8_quant import quant_pallas, dequant_pallas, stats_pallas
-from repro.kernels.s2fp8_matmul import s2fp8_matmul_pallas
+from repro.kernels import auto_interpret, dispatch, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _use_pallas(flag: bool | None) -> bool:
+    # one platform probe governs kernels and wrappers alike
+    return (not auto_interpret()) if flag is None else flag
 
 
 def s2fp8_quant(x: jnp.ndarray, *, use_pallas: bool | None = None):
-    """(payload_e5m2, alpha, beta). x must be 2-D for the kernel path."""
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas and x.ndim == 2:
-        return quant_pallas(x, interpret=not _on_tpu())
+    """(payload_e5m2, alpha, beta); any rank/shape on either path."""
+    if _use_pallas(use_pallas):
+        return dispatch.quant_nd(x)
     return ref.s2fp8_quant_ref(x)
 
 
 def s2fp8_dequant(payload, alpha, beta, *, use_pallas: bool | None = None):
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas and payload.ndim == 2:
-        return dequant_pallas(payload, alpha, beta, interpret=not _on_tpu())
+    if _use_pallas(use_pallas):
+        return dispatch.dequant_nd(payload, alpha, beta)
     return ref.s2fp8_dequant_ref(payload, alpha, beta)
+
+
+def s2fp8_truncate(x: jnp.ndarray, *, stats=None, fmt: str = "e5m2",
+                   use_pallas: bool | None = None):
+    """Fused Eq. 5 truncation; ``stats=(alpha, beta)`` enables the
+    delayed-stats single-pass path."""
+    if _use_pallas(use_pallas):
+        return dispatch.truncate_nd(x, stats=stats, fmt=fmt)
+    return ref.s2fp8_truncate_ref(x, stats=stats, fmt=fmt)
 
 
 def s2fp8_matmul(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
                  *, use_pallas: bool | None = None):
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas:
-        return s2fp8_matmul_pallas(a_payload, a_alpha, a_beta,
-                                   b_payload, b_alpha, b_beta,
-                                   interpret=not _on_tpu())
+    if _use_pallas(use_pallas):
+        return dispatch.qmatmul_nd(a_payload, a_alpha, a_beta,
+                                   b_payload, b_alpha, b_beta)
     return ref.s2fp8_matmul_ref(a_payload, a_alpha, a_beta,
                                 b_payload, b_alpha, b_beta)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,
                     use_pallas: bool | None = None, bq=512, bk=512):
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas:
+    if _use_pallas(use_pallas):
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                      bq=bq, bk=bk, interpret=not _on_tpu())
+                                      bq=bq, bk=bk, interpret=auto_interpret())
     return ref.attention_ref(q, k, v, causal=causal, window=window)

@@ -25,6 +25,13 @@ def s2fp8_dequant_ref(payload, alpha, beta, dtype=jnp.float32):
     return s2fp8.dequantize(s2fp8.S2FP8Tensor(payload, alpha, beta), dtype)
 
 
+def s2fp8_truncate_ref(x, stats=None, fmt: str = "e5m2"):
+    """Eq. 5 round-trip oracle for the fused truncate kernel (any rank)."""
+    if fmt == "e4m3":
+        return s2fp8.truncate_value_e4m3(x, stats=stats)
+    return s2fp8.truncate_value(x, stats=stats)
+
+
 # --------------------------------------------------------------------------
 # s2fp8_matmul: C = dequant(A) @ dequant(B), f32 accumulation
 # --------------------------------------------------------------------------

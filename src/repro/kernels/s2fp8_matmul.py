@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import auto_interpret
+
 
 def _dequant(y, alpha, beta):
     y = y.astype(jnp.float32)
@@ -44,8 +46,14 @@ def _matmul_kernel(aa_ref, ab_ref, ba_ref, bb_ref, a_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
 def s2fp8_matmul_pallas(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
-                        *, bm=256, bk=256, bn=256, interpret: bool = True):
-    """C[M,N] = dequant(A[M,K]) @ dequant(B[K,N]); payloads are e5m2."""
+                        *, bm=256, bk=256, bn=256, interpret: bool | None = None):
+    """C[M,N] = dequant(A[M,K]) @ dequant(B[K,N]); payloads are e5m2.
+
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter off-TPU).
+    Shapes must be block-divisible; ragged shapes are zero-padded one layer
+    up in ``repro.kernels.dispatch.qmatmul_nd``.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
     m, k = a_payload.shape
     k2, n = b_payload.shape
     assert k == k2, (a_payload.shape, b_payload.shape)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config, get_reduced_config
+from repro.core import backend as nbackend
 from repro.core.policy import make_policy
 from repro.checkpoint.manager import CheckpointManager
 from repro.data import synthetic
@@ -36,6 +37,10 @@ def main():
                     help="reduced config (CPU-scale smoke/convergence runs)")
     ap.add_argument("--policy", default="s2fp8",
                     choices=["fp32", "bf16", "fp8", "fp8_ls", "s2fp8"])
+    ap.add_argument("--backend", default=None,
+                    choices=("auto",) + nbackend.available_backends(),
+                    help="numerics backend for s2fp8 truncations "
+                         "(default: the arch config's, usually 'auto')")
     ap.add_argument("--loss-scale", type=float, default=100.0)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -50,7 +55,11 @@ def main():
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    pol = make_policy(args.policy, loss_scale=args.loss_scale)
+    backend_name = args.backend or getattr(cfg, "numerics_backend", "auto")
+    pol = make_policy(args.policy, loss_scale=args.loss_scale,
+                      backend=backend_name)
+    print(f"[train] numerics backend: {backend_name} "
+          f"-> {pol.backend_obj.name} ({jax.default_backend()})")
     key = jax.random.PRNGKey(args.seed)
 
     if args.mesh == "host":

@@ -35,6 +35,10 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
       default all-reduce is inserted by GSPMD instead.
     * track_stats: returns (mu, m, alpha, beta) of a probe gradient tensor
       (paper Fig. 5 evolution plots).
+
+    The numerics backend (ref jnp vs fused Pallas kernels) rides on the
+    policy: ``policy.backend`` is validated at Policy construction and
+    resolved through core/backend.py inside each truncation.
     """
     scale = policy.loss_scale if policy.mode == "fp8_ls" else 1.0
 

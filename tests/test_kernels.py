@@ -4,10 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import s2fp8
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.s2fp8_matmul import s2fp8_matmul_pallas
-from repro.kernels.s2fp8_quant import quant_pallas, dequant_pallas, stats_pallas
+from repro.kernels.s2fp8_quant import (quant_pallas, dequant_pallas,
+                                       stats_pallas, truncate_apply_pallas,
+                                       truncate_fused_pallas)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -53,6 +56,52 @@ def test_dequant_kernel_bitexact():
     dk = dequant_pallas(p, a, b, block=(64, 128))
     dr = ref.s2fp8_dequant_ref(p, a, b)
     np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+# ---------------------------------------------------------------------------
+# fused truncate kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["e5m2", "e4m3"])
+def test_truncate_apply_kernel_bitexact_given_stats(fmt):
+    """Same (alpha, beta) in -> the fused apply->RNE->inverse kernel must
+    be bitwise identical to the jit-compiled reference chain.  (Eager
+    op-by-op dispatch of the same chain differs from ANY compiled version
+    by 1-ulp FMA rounding — compiled-vs-compiled is the meaningful
+    comparison, and the execution shape every real caller sees.)"""
+    x = jax.random.normal(jax.random.PRNGKey(20), (128, 192)) * 1e-6
+    target = (s2fp8.TARGET_MAX_LOG2 if fmt == "e5m2"
+              else s2fp8.TARGET_MAX_LOG2_E4M3)
+    stats = s2fp8.compute_stats(x, target_max=target)
+    out = truncate_apply_pallas(x, *stats, fmt=fmt, block=(64, 64))
+    exp = jax.jit(ref.s2fp8_truncate_ref, static_argnames=("fmt",))(
+        x, stats=stats, fmt=fmt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_truncate_fused_kernel_two_phase():
+    """The single-call two-phase kernel (in-kernel stats): stats and output
+    match the reference to float tolerance."""
+    x = jax.random.normal(jax.random.PRNGKey(21), (128, 128)) * 1e4
+    out, alpha, beta = truncate_fused_pallas(x, block=(64, 64))
+    ar, br = s2fp8.compute_stats(x)
+    np.testing.assert_allclose(float(alpha), float(ar), rtol=1e-4)
+    np.testing.assert_allclose(float(beta), float(br), rtol=1e-4, atol=1e-3)
+    exp = np.asarray(s2fp8.truncate_value(x))
+    o = np.asarray(out)
+    # zero sets (flush-to-zero boundary) agree except at stats-rounding edges
+    assert ((o == 0) == (exp == 0)).mean() > 0.995
+    nz = (o != 0) & (exp != 0)
+    np.testing.assert_allclose(o[nz], exp[nz], rtol=1e-3)
+
+
+def test_truncate_fused_kernel_degenerate_blocks():
+    """All-zero and constant tensors through the in-kernel stats path."""
+    z, az, bz = truncate_fused_pallas(jnp.zeros((64, 64)), block=(32, 32))
+    assert (np.asarray(z) == 0).all()
+    assert float(az) == 1.0 and float(bz) == 0.0
+    c, _, _ = truncate_fused_pallas(jnp.full((64, 64), 2.75), block=(32, 32))
+    np.testing.assert_allclose(np.asarray(c), 2.75, rtol=1e-2)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,11 @@ LM_ARCHS = [a for a in ARCH_IDS
             if a not in ("whisper_medium", "transformer_tiny",
                          "resnet20_cifar", "ncf_ml1m")]
 SSM_ARCHS = {"zamba2_1p2b", "falcon_mamba_7b"}
+# The heaviest reduced configs (>50s each on CPU): run in the slow lane.
+_SLOW_SMOKE = {"gemma3_1b", "kimi_k2_1t_a32b", "zamba2_1p2b",
+               "deepseek_moe_16b"}
+LM_SMOKE_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+                   if a in _SLOW_SMOKE else a for a in LM_ARCHS]
 
 
 @pytest.fixture(scope="module")
@@ -24,7 +29,7 @@ def key():
     return jax.random.PRNGKey(0)
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("arch", LM_SMOKE_PARAMS)
 def test_lm_train_step_smoke(arch, key):
     cfg = get_reduced_config(arch)
     pol = make_policy("s2fp8")
@@ -80,6 +85,7 @@ def test_prefill_decode_consistency(arch, key):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_gemma_local_ring_cache_long_decode(key):
     """Ring-buffer window cache: decoding past the window must stay finite
     and match a fresh full forward on the visible window."""

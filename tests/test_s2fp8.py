@@ -1,9 +1,18 @@
-"""Core S2FP8 format tests: Eq. 1–5 invariants + hypothesis property tests."""
+"""Core S2FP8 format tests: Eq. 1–5 invariants + hypothesis property tests.
+
+The property tests need ``hypothesis``; when it is absent they skip
+cleanly (a single placeholder reports the skip) so the deterministic
+tier-1 tests always collect and run.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover - env-dependent
+    given = settings = st = None
 
 from repro.core import fp8, s2fp8
 
@@ -105,6 +114,17 @@ def test_quantize_dequantize_storage():
     np.testing.assert_allclose(np.asarray(d), np.asarray(direct), rtol=1e-6)
 
 
+def test_nbytes_payload_counts_stats_once():
+    """Wire size = 1 byte per element + exactly 8 bytes for the single
+    (alpha, beta) f32 pair — regardless of rank."""
+    for shape in [(64, 32), (7,), (3, 4, 5)]:
+        q = s2fp8.quantize(jnp.ones(shape))
+        n_elems = int(np.prod(shape))
+        assert q.nbytes_payload == n_elems + 8
+        # the stats overhead is a fixed 8 bytes, not per-element or doubled
+        assert q.nbytes_payload - n_elems == 8
+
+
 def test_ste_gradient_identity():
     x = jax.random.normal(jax.random.PRNGKey(4), (64,))
     g = jax.grad(lambda v: jnp.sum(s2fp8.truncate_ste(v) * 3.0))(x)
@@ -121,81 +141,85 @@ def test_bidir_gradient_is_truncated():
 
 
 # ---------------------------------------------------------------------------
-# hypothesis property tests
+# hypothesis property tests (skip cleanly when hypothesis is absent)
 # ---------------------------------------------------------------------------
+
+if st is None:
+    def test_property_suite_requires_hypothesis():
+        """Placeholder: reports the property suite as skipped."""
+        pytest.importorskip("hypothesis")
+
 
 _F32_BIG = 1.0000000200408773e+20     # exactly representable in f32
 finite_arrays = st.lists(
     st.floats(min_value=-_F32_BIG, max_value=_F32_BIG, allow_nan=False,
               allow_infinity=False, width=32),
-    min_size=2, max_size=256)
+    min_size=2, max_size=256) if st is not None else None
 
 
-@settings(max_examples=60, deadline=None)
-@given(finite_arrays)
-def test_prop_roundtrip_finite_and_sign_preserving(vals):
-    x = jnp.asarray(vals, jnp.float32)
-    t = np.asarray(s2fp8.truncate_value(x))
-    assert np.isfinite(t).all()                       # S2FP8 never overflows
-    xn = np.asarray(x)
-    nz = (t != 0) & (xn != 0)
-    assert (np.sign(t[nz]) == np.sign(xn[nz])).all()
-    # magnitudes never exceed the tensor max (max maps to exactly 2^15 in Y)
-    if nz.any():
-        assert np.abs(t).max() <= np.abs(xn).max() * 1.2
+if st is not None:
+    @settings(max_examples=60, deadline=None)
+    @given(finite_arrays)
+    def test_prop_roundtrip_finite_and_sign_preserving(vals):
+        x = jnp.asarray(vals, jnp.float32)
+        t = np.asarray(s2fp8.truncate_value(x))
+        assert np.isfinite(t).all()                   # S2FP8 never overflows
+        xn = np.asarray(x)
+        nz = (t != 0) & (xn != 0)
+        assert (np.sign(t[nz]) == np.sign(xn[nz])).all()
+        # magnitudes never exceed the tensor max (max maps to exactly 2^15 in Y)
+        if nz.any():
+            assert np.abs(t).max() <= np.abs(xn).max() * 1.2
 
+    @settings(max_examples=60, deadline=None)
+    @given(finite_arrays, st.floats(min_value=-30, max_value=30))
+    def test_prop_scale_covariance(vals, log_scale):
+        """S2FP8 is (approximately) scale-covariant: T(c*x) ~ c*T(x) for c=2^k.
 
-@settings(max_examples=60, deadline=None)
-@given(finite_arrays, st.floats(min_value=-30, max_value=30))
-def test_prop_scale_covariance(vals, log_scale):
-    """S2FP8 is (approximately) scale-covariant: T(c*x) ~ c*T(x) for c=2^k.
+        Power-of-two scaling shifts mu and m equally -> identical alpha,
+        shifted beta -> identical quantization grid in the scaled domain.
+        """
+        c = float(2.0 ** round(log_scale))
+        x = jnp.asarray(vals, jnp.float32)
+        # guard in f32 (the model's arithmetic): scaling must not push any
+        # element into f32 overflow or the subnormal flush region — those are
+        # f32 edge effects, not properties of the S2FP8 format.
+        xc32 = np.asarray(x, np.float32) * np.float32(c)
+        if not np.isfinite(xc32).all():
+            return
+        nz = np.asarray(x) != 0
+        if (np.abs(xc32[nz]) < 1e-30).any() or (np.abs(xc32[nz]) > 1e30).any():
+            return
+        t1 = np.asarray(s2fp8.truncate_value(x)) * c
+        t2 = np.asarray(s2fp8.truncate_value(x * c))
+        mask = np.isfinite(t1) & (np.abs(t1) > 0) & (t2 != 0)
+        np.testing.assert_allclose(t1[mask], t2[mask], rtol=1e-3)
 
-    Power-of-two scaling shifts mu and m equally -> identical alpha, shifted
-    beta -> identical quantization grid in the scaled domain.
-    """
-    c = float(2.0 ** round(log_scale))
-    x = jnp.asarray(vals, jnp.float32)
-    # guard in f32 (the model's arithmetic): scaling must not push any
-    # element into f32 overflow or the subnormal flush region — those are
-    # f32 edge effects, not properties of the S2FP8 format.
-    xc32 = np.asarray(x, np.float32) * np.float32(c)
-    if not np.isfinite(xc32).all():
-        return
-    nz = np.asarray(x) != 0
-    if (np.abs(xc32[nz]) < 1e-30).any() or (np.abs(xc32[nz]) > 1e30).any():
-        return
-    t1 = np.asarray(s2fp8.truncate_value(x)) * c
-    t2 = np.asarray(s2fp8.truncate_value(x * c))
-    mask = np.isfinite(t1) & (np.abs(t1) > 0) & (t2 != 0)
-    np.testing.assert_allclose(t1[mask], t2[mask], rtol=1e-3)
+    @settings(max_examples=40, deadline=None)
+    @given(finite_arrays)
+    def test_prop_idempotent(vals):
+        """Truncating an already-truncated tensor changes (almost) nothing.
 
+        Exact idempotence does not hold (stats move once flushed values drop
+        out), but surviving values must stay within one quantization step.
+        """
+        x = jnp.asarray(vals, jnp.float32)
+        t1 = s2fp8.truncate_value(x)
+        t2 = np.asarray(s2fp8.truncate_value(t1))
+        t1 = np.asarray(t1)
+        nz = (t1 != 0) & (t2 != 0)
+        if nz.any():
+            alpha, _ = s2fp8.compute_stats(t1)
+            logerr = np.abs(np.log2(np.abs(t2[nz])) - np.log2(np.abs(t1[nz])))
+            assert logerr.max() <= 1.1 / max(float(alpha), 1e-3)
 
-@settings(max_examples=40, deadline=None)
-@given(finite_arrays)
-def test_prop_idempotent(vals):
-    """Truncating an already-truncated tensor changes (almost) nothing.
-
-    Exact idempotence does not hold (stats move once flushed values drop
-    out), but surviving values must stay within one quantization step.
-    """
-    x = jnp.asarray(vals, jnp.float32)
-    t1 = s2fp8.truncate_value(x)
-    t2 = np.asarray(s2fp8.truncate_value(t1))
-    t1 = np.asarray(t1)
-    nz = (t1 != 0) & (t2 != 0)
-    if nz.any():
-        alpha, _ = s2fp8.compute_stats(t1)
-        logerr = np.abs(np.log2(np.abs(t2[nz])) - np.log2(np.abs(t1[nz])))
-        assert logerr.max() <= 1.1 / max(float(alpha), 1e-3)
-
-
-@settings(max_examples=40, deadline=None)
-@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
-       st.sampled_from([1e-12, 1e-4, 1.0, 1e4, 1e12]))
-def test_prop_relative_error_bounded_for_gaussians(seed, scale):
-    x = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * scale
-    t = np.asarray(s2fp8.truncate_value(x))
-    xn = np.asarray(x)
-    nz = t != 0
-    rel = np.abs(t[nz] - xn[nz]) / np.abs(xn[nz])
-    assert np.median(rel) < 0.05
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+           st.sampled_from([1e-12, 1e-4, 1.0, 1e4, 1e12]))
+    def test_prop_relative_error_bounded_for_gaussians(seed, scale):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * scale
+        t = np.asarray(s2fp8.truncate_value(x))
+        xn = np.asarray(x)
+        nz = t != 0
+        rel = np.abs(t[nz] - xn[nz]) / np.abs(xn[nz])
+        assert np.median(rel) < 0.05

@@ -37,6 +37,7 @@ def _tiny_setup(policy_mode="s2fp8", arch="minicpm_2b", lr=3e-3, seed=0):
     return cfg, params, opt, step, data_fn
 
 
+@pytest.mark.slow
 def test_loss_decreases_s2fp8():
     _, params, opt, step, data_fn = _tiny_setup("s2fp8")
     opt_state = opt.init(params)
