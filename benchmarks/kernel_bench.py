@@ -82,13 +82,71 @@ def bench_truncate(results):
         })
 
 
+def bench_statsbank(results):
+    """The stats lane: full train-step time, exact stats (a reduction per
+    truncation, every step) vs the jit-carried StatsBank (reductions under
+    ``lax.cond``, skipped on non-refresh steps).  Times a non-refresh step
+    — the steady state: refresh_every-1 of every refresh_every steps."""
+    import jax.numpy as jnp
+    from repro.core import statsbank
+    from repro.core.policy import make_policy
+    from repro.optim import optimizers, schedules
+    from repro.training.trainer import make_train_step
+
+    key = jax.random.PRNGKey(0)
+    # small batch through big weights: the per-step cost is the WEIGHT
+    # truncations (the tensors whose stats the bank amortizes), not MXU
+    # flops — the shape of the win the subsystem targets
+    n_tensors, dim, batch = 4, 1024, 16
+    params = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                         (dim, dim)) * 1e-4
+              for i in range(n_tensors)}
+    x = jax.random.normal(jax.random.fold_in(key, 99), (batch, dim)) * 1e-4
+    pol = make_policy("s2fp8")
+
+    def loss_fn(p, batch, pol_):
+        h = batch
+        for i in range(n_tensors):
+            h = pol_.dot(h, p[f"w{i}"])
+        return jnp.sum(h * h), {}
+
+    opt = optimizers.adamw()
+    sched = schedules.constant(1e-3)
+    scfg = statsbank.StatsConfig(refresh_every=16)
+    bank = statsbank.init_bank(loss_fn, params, x, pol, scfg)
+    ost = opt.init(params)
+
+    exact_step = jax.jit(make_train_step(loss_fn, opt, sched, pol))
+    bank_step = jax.jit(make_train_step(loss_fn, opt, sched, pol, stats=scfg))
+    # bootstrap-refresh the bank once so the timed step is pure delayed
+    _, _, bank, _ = bank_step(params, ost, bank, x, jnp.int32(0))
+
+    step = jnp.int32(1)      # 1 % 16 != 0 -> non-refresh step
+    exact_us = time_jitted(lambda p: exact_step(p, ost, x, step)[2]["loss"],
+                           params)
+    bank_us = time_jitted(
+        lambda p: bank_step(p, ost, bank, x, step)[3]["loss"], params)
+    emit("statsbank_step_exact", exact_us,
+         f"{n_tensors}x[{batch}x{dim}]@[{dim}x{dim}] chain")
+    emit("statsbank_step_bank", bank_us,
+         f"speedup {exact_us / bank_us:.2f}x (non-refresh step)")
+    results["stats"].append({
+        "n_tensors": n_tensors, "dim": dim, "batch": batch,
+        "refresh_every": scfg.refresh_every,
+        "exact_step_us": exact_us, "bank_step_us": bank_us,
+        "bank_speedup": exact_us / bank_us,
+        "sites": len(bank),
+    })
+
+
 def main():
     results = {"backend": nbackend.get_backend().name,
                "platform": jax.default_backend(),
-               "truncate": [], "quantize": [], "matmul": []}
+               "truncate": [], "quantize": [], "matmul": [], "stats": []}
     key = jax.random.PRNGKey(0)
 
     bench_truncate(results)
+    bench_statsbank(results)
 
     for n in [1 << 16, 1 << 20, 1 << 22]:
         x = jax.random.normal(key, (n,)) * 1e-5

@@ -62,8 +62,12 @@ class CheckpointManager:
             meta = {"step": step, "n_leaves": len(host_leaves),
                     "compress": self.compress}
             for i, leaf in enumerate(host_leaves):
+                # compression is for big >=2-D weight/activation leaves;
+                # scalars and 1-D leaves (StatsBank entries, norm scales,
+                # biases) are kept raw so save->restore is bit-exact for
+                # them even under compress=True
                 if (self.compress and leaf.dtype in (np.float32,)
-                        and leaf.size >= 4096):
+                        and leaf.size >= 4096 and leaf.ndim >= 2):
                     t = s2fp8.quantize(leaf)
                     np.save(os.path.join(tmp, f"leaf_{i:05d}.payload.npy"),
                             np.asarray(t.payload).view(np.uint8))

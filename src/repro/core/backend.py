@@ -20,15 +20,22 @@ ship:
 ``Policy`` dataclass carries the selection (core/policy.py), the launchers
 expose it as ``--backend``, and ArchConfig carries a per-arch default.
 
-Delayed-stats mode: every backend's ``truncate`` accepts precomputed
-``stats=(alpha, beta)``.  :func:`truncate_delayed` and
-:class:`DelayedStatsCache` build the two idioms on top — a functional
-carry for jitted loops (refresh the reduction every k steps, reuse the
-scalars in between) and a host-side keyed cache for eager callers
-(serving, checkpoint compression).  Tensor distributions drift slowly
-between adjacent steps (the premise behind amortized scaling in FP8
-training recipes), so stale-by-k stats cost little accuracy while removing
-the stats reduction — the only non-elementwise pass — from the hot loop.
+Delayed-stats mode: every backend's ``truncate`` and ``quantize`` accept
+precomputed ``stats=(alpha, beta)``.  The StatsBank subsystem
+(core/statsbank.py) is the first-class consumer: a jit-carried, sharded,
+checkpointable bank of per-site stats refreshed every k steps inside the
+train step, plus ``HostStatsBank`` for eager callers (serving, checkpoint
+compression).  :func:`truncate_delayed` remains the low-level functional
+hook, and :class:`DelayedStatsCache` is a deprecated shim over the host
+bank.  Tensor distributions drift slowly between adjacent steps (the
+premise behind amortized scaling in FP8 training recipes), so stale-by-k
+stats cost little accuracy while removing the stats reduction — the only
+non-elementwise pass — from the hot loop.
+
+Stats locality is explicit: ``compute_stats(x)`` reduces over the tensor
+the caller holds (per-shard inside ``shard_map``), while
+``compute_stats(x, axis_name=...)`` all-reduces the raw
+``compute_stats_partials`` triplet for exact global stats.
 """
 from __future__ import annotations
 
@@ -44,20 +51,45 @@ from repro.core.s2fp8 import S2FP8Tensor
 _TARGET_MAX = s2fp8.FMT_TARGET_MAX
 
 
+def all_reduce_stats_partials(partials, axis_name: str):
+    """Combine per-shard (log_sum, log_max, count) stats partials across a
+    mapped/shard_map axis: sums and counts add, maxes max.  This is the one
+    place global-stats semantics live — every caller (backend
+    ``compute_stats(axis_name=...)``, the StatsBank refresh) reduces the
+    same triplet, so global stats are exact, not shard-averaged."""
+    log_sum, log_max, count = partials
+    return (jax.lax.psum(log_sum, axis_name),
+            jax.lax.pmax(log_max, axis_name),
+            jax.lax.psum(count, axis_name))
+
+
 class NumericsBackend:
     """Interface every numerics engine implements.
 
     ``stats`` arguments/returns are (alpha, beta) f32 scalar pairs;
     ``fmt`` selects the payload format ("e5m2" — the paper's — or "e4m3").
+
+    Stats semantics are explicit: ``compute_stats(x)`` reduces over the
+    tensor the caller holds (LOCAL — inside a ``shard_map`` body that is
+    the shard); ``compute_stats(x, axis_name=...)`` all-reduces the raw
+    partials across that mesh axis first (GLOBAL — every shard gets the
+    stats of the logical tensor).  ``compute_stats_partials`` exposes the
+    raw (sum, max, count) triplet for callers that combine shards
+    themselves (the StatsBank refresh).
     """
 
     name = "abstract"
 
-    def compute_stats(self, x: jnp.ndarray, *, fmt: str = "e5m2"
+    def compute_stats(self, x: jnp.ndarray, *, fmt: str = "e5m2",
+                      axis_name: Optional[str] = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         raise NotImplementedError
 
-    def quantize(self, x: jnp.ndarray) -> S2FP8Tensor:
+    def compute_stats_partials(self, x: jnp.ndarray
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def quantize(self, x: jnp.ndarray, *, stats=None) -> S2FP8Tensor:
         raise NotImplementedError
 
     def dequantize(self, t: S2FP8Tensor, dtype=jnp.float32) -> jnp.ndarray:
@@ -96,11 +128,18 @@ class RefBackend(NumericsBackend):
 
     name = "ref"
 
-    def compute_stats(self, x, *, fmt: str = "e5m2"):
+    def compute_stats(self, x, *, fmt: str = "e5m2", axis_name=None):
+        if axis_name is not None:
+            partials = all_reduce_stats_partials(
+                self.compute_stats_partials(x), axis_name)
+            return s2fp8.stats_from_reduction(*partials, _TARGET_MAX[fmt])
         return s2fp8.compute_stats_jit(x, target_max=_TARGET_MAX[fmt])
 
-    def quantize(self, x):
-        return s2fp8.quantize(x)
+    def compute_stats_partials(self, x):
+        return s2fp8.compute_stats_partials_jit(x)
+
+    def quantize(self, x, *, stats=None):
+        return s2fp8.quantize(x, stats=stats)
 
     def dequantize(self, t, dtype=jnp.float32):
         return s2fp8.dequantize(t, dtype)
@@ -143,21 +182,32 @@ class PallasBackend(NumericsBackend):
         if name is not None:
             self.name = name
 
-    def compute_stats(self, x, *, fmt: str = "e5m2"):
+    def compute_stats(self, x, *, fmt: str = "e5m2", axis_name=None):
         from repro.kernels import dispatch
+        if axis_name is not None:
+            partials = all_reduce_stats_partials(
+                self.compute_stats_partials(x), axis_name)
+            return s2fp8.stats_from_reduction(*partials, _TARGET_MAX[fmt])
         if self.stats_mode == "exact":
             # Same compiled program as RefBackend — the bitwise-parity anchor.
             return s2fp8.compute_stats_jit(x, target_max=_TARGET_MAX[fmt])
         return dispatch.stats_nd(x, target_max=_TARGET_MAX[fmt],
                                  block=self.block, interpret=self.interpret)
 
-    def quantize(self, x):
+    def compute_stats_partials(self, x):
+        if self.stats_mode == "exact":
+            return s2fp8.compute_stats_partials_jit(x)
+        from repro.kernels import dispatch
+        return dispatch.stats_partials_nd(x, block=self.block,
+                                          interpret=self.interpret)
+
+    def quantize(self, x, *, stats=None):
         from repro.kernels import dispatch
         # exact mode: stats from the shared compiled reduction, so stored
         # (alpha, beta) match RefBackend.quantize and this backend's own
         # compute_stats bit-for-bit; fused mode keeps the reduction in-kernel
-        stats = (s2fp8.compute_stats_jit(x) if self.stats_mode == "exact"
-                 else None)
+        if stats is None and self.stats_mode == "exact":
+            stats = s2fp8.compute_stats_jit(x)
         payload, alpha, beta = dispatch.quant_nd(x, stats=stats,
                                                  block=self.block,
                                                  interpret=self.interpret)
@@ -272,34 +322,41 @@ def truncate_delayed(x: jnp.ndarray, stats, *, refresh=False,
 
 
 class DelayedStatsCache:
-    """Host-side keyed (alpha, beta) cache for eager callers.
+    """DEPRECATED shim over :class:`repro.core.statsbank.HostStatsBank`.
 
-    ``cache.truncate(x, key, step)`` reuses the stats stored under ``key``
-    and refreshes them every ``refresh_every`` steps — between refreshes
-    the truncation is a single elementwise pass (no reduction).
+    There is one stats-caching story now — the StatsBank subsystem
+    (core/statsbank.py): jit-carried banks for train steps, and
+    ``HostStatsBank`` for eager callers (serving, checkpoint compression).
+    This class keeps the old constructor/``truncate``/``clear`` surface
+    (plus the ``_stats`` / ``_last_refresh`` views) and warns on use.
     """
 
     def __init__(self, backend: Optional[str] = None,
                  refresh_every: int = 16, fmt: str = "e5m2"):
-        if refresh_every < 1:
-            raise ValueError("refresh_every must be >= 1")
+        import warnings
+        warnings.warn(
+            "DelayedStatsCache is deprecated; use "
+            "repro.core.statsbank.HostStatsBank (same semantics, shared "
+            "with the jit-carried StatsBank)", DeprecationWarning,
+            stacklevel=2)
+        from repro.core import statsbank
+        self._impl = statsbank.HostStatsBank(backend=backend,
+                                             refresh_every=refresh_every,
+                                             fmt=fmt)
         self.backend = backend
         self.refresh_every = refresh_every
         self.fmt = fmt
-        self._stats: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
-        self._last_refresh: Dict[str, int] = {}
 
     def truncate(self, x: jnp.ndarray, key: str, step: int) -> jnp.ndarray:
-        refresh = (key not in self._stats or
-                   step - self._last_refresh[key] >= self.refresh_every)
-        out, stats = truncate_delayed(x, self._stats.get(key),
-                                      refresh=refresh, backend=self.backend,
-                                      fmt=self.fmt)
-        if refresh:
-            self._stats[key] = stats
-            self._last_refresh[key] = step
-        return out
+        return self._impl.truncate(x, key, step)
 
     def clear(self):
-        self._stats.clear()
-        self._last_refresh.clear()
+        self._impl.clear()
+
+    @property
+    def _stats(self) -> Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]:
+        return {k: (e["alpha"], e["beta"]) for k, e in self._impl.bank.items()}
+
+    @property
+    def _last_refresh(self) -> Dict[str, int]:
+        return {k: int(e["last"]) for k, e in self._impl.bank.items()}

@@ -21,45 +21,56 @@ verifies numerics; the dry-run roofline counts the bytes).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import fp8, s2fp8
+from repro.core import backend as nbackend
+from repro.core.s2fp8 import S2FP8Tensor
 
 
-def _encode_local(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Per-shard S2FP8 encode (stats are per-shard — still one (a,b) pair
-    per tensor-shard, 8 bytes against megabytes of payload)."""
-    alpha, beta = s2fp8.compute_stats(x)
-    y = s2fp8._forward_map(x.astype(jnp.float32), alpha, beta)
-    return fp8.cast_e5m2(y), alpha, beta
+def _encode_local(x: jnp.ndarray, backend: Optional[str] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-shard S2FP8 encode through the numerics-backend registry —
+    LOCAL stats by the backend-interface convention (``compute_stats``
+    without ``axis_name`` reduces over the tensor the caller holds; inside
+    a shard_map body that is the shard).  Still one (a, b) pair per
+    tensor-shard, 8 bytes against megabytes of payload; on TPU pods the
+    registry resolves to the fused Pallas kernels for the encode pass."""
+    t = nbackend.get_backend(backend).quantize(x)
+    return t.payload, t.alpha, t.beta
 
 
-def _decode_local(payload, alpha, beta) -> jnp.ndarray:
-    return s2fp8._inverse_map(payload.astype(jnp.float32), alpha, beta)
+def _decode_local(payload, alpha, beta, backend: Optional[str] = None
+                  ) -> jnp.ndarray:
+    return nbackend.get_backend(backend).dequantize(
+        S2FP8Tensor(payload=payload, alpha=alpha, beta=beta))
 
 
-def compressed_allreduce_1d(g: jnp.ndarray, mesh: Mesh, axis: str = "data"):
+def compressed_allreduce_1d(g: jnp.ndarray, mesh: Mesh, axis: str = "data",
+                            backend: Optional[str] = None):
     """All-reduce a replicated-per-shard gradient across ``axis`` with an
     S2FP8-compressed all-gather leg.  g must be 1-D with len % axis_size == 0
-    (caller flattens/pads; see ``compressed_grad_sync``)."""
+    (caller flattens/pads; see ``compressed_grad_sync``).  ``backend``
+    selects the numerics engine for the encode/decode legs (None/"auto":
+    platform default — fused Pallas kernels on TPU, ref jnp elsewhere)."""
     n = mesh.shape[axis]
 
     def body(gl):
         # gl: the local copy [L]. reduce_scatter in bf16.
         red = jax.lax.psum_scatter(gl.astype(jnp.bfloat16), axis,
                                    scatter_dimension=0, tiled=True)
-        payload, alpha, beta = _encode_local(red.astype(jnp.float32))
+        payload, alpha, beta = _encode_local(red.astype(jnp.float32), backend)
         payloads = jax.lax.all_gather(payload, axis, tiled=True)
         alphas = jax.lax.all_gather(alpha[None], axis)
         betas = jax.lax.all_gather(beta[None], axis)
         shard_len = gl.shape[0] // n
         chunks = payloads.reshape(n, shard_len)
-        dec = jax.vmap(_decode_local)(chunks, alphas[:, 0], betas[:, 0])
+        dec = jax.vmap(functools.partial(_decode_local, backend=backend))(
+            chunks, alphas[:, 0], betas[:, 0])
         return dec.reshape(-1)
 
     return shard_map(body, mesh=mesh,
@@ -67,7 +78,8 @@ def compressed_allreduce_1d(g: jnp.ndarray, mesh: Mesh, axis: str = "data"):
 
 
 def compressed_grad_sync(grads, mesh: Mesh, axis: str = "data",
-                         min_size: int = 1 << 16):
+                         min_size: int = 1 << 16,
+                         backend: Optional[str] = None):
     """Apply the compressed all-reduce to every leaf >= min_size elements
     (small leaves go through a plain f32 psum — stats overhead dominates
     below ~64k elements). Leaves are averaged over ``axis``."""
@@ -80,7 +92,7 @@ def compressed_grad_sync(grads, mesh: Mesh, axis: str = "data",
                 return jax.lax.psum(x, axis) / n
             return shard_map(plain, mesh=mesh, in_specs=P(), out_specs=P(),
                              check_rep=False)(g.astype(jnp.float32)).astype(g.dtype)
-        out = compressed_allreduce_1d(flat * n, mesh, axis) / n
+        out = compressed_allreduce_1d(flat * n, mesh, axis, backend) / n
         return out.reshape(g.shape).astype(g.dtype)
 
     return jax.tree_util.tree_map(sync_leaf, grads)

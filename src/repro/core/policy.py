@@ -23,6 +23,7 @@ default ``"auto"`` picks pallas on TPU, ref elsewhere.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -30,12 +31,35 @@ import jax.numpy as jnp
 
 from repro.core import backend as nbackend
 from repro.core import s2fp8
+from repro.core import statsbank
 
 MODES = ("fp32", "bf16", "fp8", "fp8_ls", "s2fp8", "s2fp8_e4m3")
 
 
 def _identity(x):
     return x
+
+
+@functools.lru_cache(maxsize=None)
+def _s2fp8_wrap(backend: Optional[str], fmt: str) -> Callable:
+    """Session-aware truncation wrapper for the s2fp8 modes.
+
+    When a StatsBank session is active (core/statsbank.py — the trainer
+    binds one inside the jitted train step), each call resolves to a named
+    bank site: the truncation reuses the site's carried (alpha, beta) and
+    the stats reduction only runs on refresh steps.  Outside a session it
+    is the classic exact-stats ``bidir_truncate``.  Cached per
+    (backend, fmt) so the callable is a stable object under jit tracing.
+    """
+    exact = nbackend.bidir_truncate(backend, fmt)
+
+    def wrap(x):
+        sess = statsbank.current_session()
+        if sess is not None:
+            return sess.truncate(x, fmt=fmt, backend=backend)
+        return exact(x)
+
+    return wrap
 
 
 def _bf16_cast(x):
@@ -83,9 +107,9 @@ class Policy:
     @property
     def _wrap(self) -> Callable:
         if self.mode == "s2fp8":
-            return nbackend.bidir_truncate(self.backend, "e5m2")
+            return _s2fp8_wrap(self.backend, "e5m2")
         if self.mode == "s2fp8_e4m3":
-            return nbackend.bidir_truncate(self.backend, "e4m3")
+            return _s2fp8_wrap(self.backend, "e4m3")
         if self.mode in ("fp8", "fp8_ls"):
             return s2fp8.fp8_truncate_bidir
         if self.mode == "bf16":
@@ -153,7 +177,16 @@ class Policy:
         if self.mode != "s2fp8":
             return self.dot(a, b)
         be = self.backend_obj
-        y = be.qmatmul(be.quantize(a), be.quantize(b))
+        sess = statsbank.current_session()
+        if sess is not None:
+            # bank-carried operand stats: quantization is pure elementwise
+            # (no per-call reduction); serving keeps the bank warm via
+            # statsbank.HostStatsBank
+            sa = sess.operand_stats(a, fmt="e5m2")
+            sb = sess.operand_stats(b, fmt="e5m2")
+            y = be.qmatmul(be.quantize(a, stats=sa), be.quantize(b, stats=sb))
+        else:
+            y = be.qmatmul(be.quantize(a), be.quantize(b))
         return self._wrap_out(y).astype(a.dtype)
 
 

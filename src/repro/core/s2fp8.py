@@ -112,9 +112,17 @@ def stats_from_reduction(log_sum, log_max, count,
     return alpha.astype(jnp.float32), beta.astype(jnp.float32)
 
 
-def compute_stats(x: jnp.ndarray,
-                  target_max: float = TARGET_MAX_LOG2) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Return (alpha, beta) per paper Eq. 3–4, ignoring zero elements."""
+def compute_stats_partials(x: jnp.ndarray
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Raw reduction triplet (sum log2|X|, max log2|X|, nonzero count as f32).
+
+    This is the additive/max-decomposable half of Eq. 3–4: partials from
+    disjoint shards combine with (+, max, +), which is what gives sharded
+    stats their exact global semantics — all-reduce the triplet, then run
+    the :func:`stats_from_reduction` epilogue once (core/backend.py
+    ``compute_stats(..., axis_name=...)`` and the StatsBank refresh both
+    do exactly that).  ``log_max`` is -inf for an all-zero tensor.
+    """
     x = x.astype(jnp.float32)
     absx = jnp.abs(x)
     nonzero = absx > 0.0
@@ -122,8 +130,14 @@ def compute_stats(x: jnp.ndarray,
     count = jnp.sum(nonzero)
     log_sum = jnp.sum(logx)
     log_max = jnp.max(jnp.where(nonzero, logx, -jnp.inf))
-    return stats_from_reduction(log_sum, log_max,
-                                count.astype(jnp.float32), target_max)
+    return log_sum, log_max, count.astype(jnp.float32)
+
+
+def compute_stats(x: jnp.ndarray,
+                  target_max: float = TARGET_MAX_LOG2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (alpha, beta) per paper Eq. 3–4, ignoring zero elements."""
+    log_sum, log_max, count = compute_stats_partials(x)
+    return stats_from_reduction(log_sum, log_max, count, target_max)
 
 
 # One jitted program for the stats reduction, shared by every backend
@@ -131,6 +145,11 @@ def compute_stats(x: jnp.ndarray,
 # both sides of a ref-vs-pallas comparison, or XLA's per-program fusion/FMA
 # choices shift them by 1 ulp and break bitwise parity downstream.
 compute_stats_jit = jax.jit(compute_stats, static_argnames=("target_max",))
+
+# Partials as one jitted program too — the sharded-stats building block
+# (psum/pmax the triplet, then the epilogue) keeps the same compiled
+# reduction on every shard.
+compute_stats_partials_jit = jax.jit(compute_stats_partials)
 
 
 def _forward_map(x: jnp.ndarray, alpha, beta) -> jnp.ndarray:
@@ -152,10 +171,14 @@ def _inverse_map(y: jnp.ndarray, alpha, beta) -> jnp.ndarray:
     return jnp.where(nonzero, x, 0.0)
 
 
-def quantize(x: jnp.ndarray) -> S2FP8Tensor:
-    """FP32/bf16 tensor -> S2FP8 storage (payload + stats)."""
-    alpha, beta = compute_stats(x)
+def quantize(x: jnp.ndarray, stats: Optional[Tuple] = None) -> S2FP8Tensor:
+    """FP32/bf16 tensor -> S2FP8 storage (payload + stats).
+
+    ``stats=(alpha, beta)`` quantizes with the given scalars instead of
+    reducing over ``x`` — the delayed-stats / StatsBank path."""
+    alpha, beta = compute_stats(x) if stats is None else stats
     y = _forward_map(x.astype(jnp.float32), alpha, beta)
+    y = jnp.clip(y, -fp8.E5M2_MAX, fp8.E5M2_MAX)
     return S2FP8Tensor(payload=fp8.cast_e5m2(y), alpha=alpha, beta=beta)
 
 

@@ -24,6 +24,7 @@ core/backend.py builds the user-facing backend objects on top of these.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -68,6 +69,11 @@ def as_blocked_2d(x: jnp.ndarray, block=DEFAULT_BLOCK) -> jnp.ndarray:
     else:
         flat = x.reshape(-1)
         lane = min(LANE, _ceil_to(max(flat.shape[0], 1), LANE_ALIGN))
+        # widen the lane so the block width and tile alignment both divide
+        # it: all later padding then lands on whole trailing rows, never
+        # interleaved mid-row (from_blocked_2d's flatten-and-slice inverse
+        # requires the flattened element order to be a prefix)
+        lane = _ceil_to(lane, math.lcm(min(block[1], lane), LANE_ALIGN))
         flat = _pad_axis(flat, 0, _ceil_to(max(flat.shape[0], 1), lane))
         x2 = flat.reshape(-1, lane)
     x2 = _pad_axis(x2, 0, _ceil_to(x2.shape[0], SUBLANE_ALIGN))
@@ -92,11 +98,20 @@ def from_blocked_2d(y2: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
 # quantization / stats
 # ---------------------------------------------------------------------------
 
+def stats_partials_nd(x: jnp.ndarray, *, block=DEFAULT_BLOCK,
+                      interpret: Optional[bool] = None):
+    """Raw (log_sum, log_max, count) triplet via the Pallas blocked
+    reduction, any rank/shape.  Zero-padding is exact (zeros are excluded
+    from the reduction), so partials from disjoint shards combine with
+    (+, max, +) — the sharded-stats building block."""
+    x2 = as_blocked_2d(x.astype(jnp.float32), block)
+    return stats_pallas(x2, block=block, interpret=interpret)
+
+
 def stats_nd(x: jnp.ndarray, *, target_max: float = s2fp8.TARGET_MAX_LOG2,
              block=DEFAULT_BLOCK, interpret: Optional[bool] = None):
     """(alpha, beta) via the Pallas blocked reduction, any rank/shape."""
-    x2 = as_blocked_2d(x.astype(jnp.float32), block)
-    s, mx, c = stats_pallas(x2, block=block, interpret=interpret)
+    s, mx, c = stats_partials_nd(x, block=block, interpret=interpret)
     return s2fp8.stats_from_reduction(s, mx, c, target_max)
 
 

@@ -74,6 +74,9 @@ def _apply_kernel(alpha_ref, beta_ref, x_ref, out_ref):
     nz = absx > 0.0
     ylog = alpha * jnp.log2(jnp.where(nz, absx, 1.0)) + beta
     y = jnp.where(nz, jnp.sign(x) * jnp.exp2(ylog), 0.0)
+    # clamp at e5m2 max finite, mirroring core/s2fp8.py quantize: a no-op
+    # for fresh stats, saturation (not inf) under stale delayed/bank stats
+    y = jnp.clip(y, -FMT_MAX_FINITE["e5m2"], FMT_MAX_FINITE["e5m2"])
     out_ref[...] = y.astype(jnp.float8_e5m2)
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config, get_reduced_config
 from repro.core import backend as nbackend
+from repro.core import statsbank
 from repro.core.policy import make_policy
 from repro.checkpoint.manager import CheckpointManager
 from repro.data import synthetic
@@ -52,6 +53,13 @@ def main():
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
     ap.add_argument("--track-stats", action="store_true")
+    ap.add_argument("--stats-refresh-every", type=int, default=0,
+                    help="enable the jit-carried StatsBank: refresh the "
+                         "per-site (alpha, beta) reduction every K steps "
+                         "(0 = off, exact stats every truncation)")
+    ap.add_argument("--stats-ema", type=float, default=0.0,
+                    help="EMA decay on the raw (mu, m) moments at each "
+                         "StatsBank refresh (0 = replace)")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -73,8 +81,14 @@ def main():
     sched = schedules.make_schedule(
         cfg.schedule if cfg.schedule == "wsd" else "cosine",
         args.lr, total_steps=args.steps, warmup=max(args.steps // 20, 1))
+    stats_cfg = None
+    if args.stats_refresh_every > 0:
+        stats_cfg = statsbank.StatsConfig(
+            refresh_every=args.stats_refresh_every,
+            ema_decay=args.stats_ema)
     step_fn = make_train_step(loss_fn, opt, sched, pol,
-                              track_stats=args.track_stats)
+                              track_stats=args.track_stats,
+                              stats=stats_cfg)
 
     table = synthetic.make_markov_table(args.seed, cfg.vocab) \
         if not cfg.enc_dec else None
@@ -91,9 +105,16 @@ def main():
     with mesh, shd.use_rules(shd.TRAIN_RULES, sizes):
         params = api.init_params(cfg, key)
         opt_state = opt.init(params)
+        bank = None
+        if stats_cfg is not None:
+            bank = statsbank.init_bank(loss_fn, params, data_fn(0), pol,
+                                       stats_cfg)
+            print(f"[train] statsbank: {len(bank)} sites, refresh every "
+                  f"{stats_cfg.refresh_every} steps, ema {stats_cfg.ema_decay}")
         ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
         loop = TrainLoop(step_fn, params, opt_state, data_fn,
-                         ckpt_manager=ckpt, ckpt_every=args.ckpt_every)
+                         ckpt_manager=ckpt, ckpt_every=args.ckpt_every,
+                         stats_bank=bank)
         if args.resume == "auto" and ckpt is not None and ckpt.latest_step():
             loop.maybe_resume()
         history = loop.run(args.steps)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.parallel.sharding import shard
 
@@ -223,11 +224,14 @@ def init_mlp(cfg: ArchConfig, key, d_in: int, d_ff: int) -> Dict[str, jnp.ndarra
 
 def mlp_fwd(p, x, cfg: ArchConfig, pol: Policy):
     glu = cfg.activation.endswith("_glu")
-    hg = pol.dot(x, p["w_gate"].astype(x.dtype))
-    hl = pol.dot(x, p["w_up"].astype(x.dtype)) if glu else None
-    h = activate(hg, hl, cfg.activation)
-    h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
-    return pol.dot(h, p["w_down"].astype(x.dtype))
+    # named StatsBank scope: every GEMM truncation site inside this MLP
+    # gets a stable ".../mlp/tN" key in the per-layer stats bank
+    with statsbank.scope("mlp"):
+        hg = pol.dot(x, p["w_gate"].astype(x.dtype))
+        hl = pol.dot(x, p["w_up"].astype(x.dtype)) if glu else None
+        h = activate(hg, hl, cfg.activation)
+        h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
+        return pol.dot(h, p["w_down"].astype(x.dtype))
 
 
 def init_moe(cfg: ArchConfig, key) -> Dict[str, jnp.ndarray]:
@@ -387,9 +391,12 @@ def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
     window = cfg.window if block_type == "local" else None
 
     xn = apply_norm(p["ln1"], x, cfg)
-    q = pol.dot(xn, p["wq"].astype(x.dtype)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
-    k = pol.dot(xn, p["wk"].astype(x.dtype)).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
-    v = pol.dot(xn, p["wv"].astype(x.dtype)).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    # named StatsBank scope for the attention projections ("attn/tN" keys);
+    # the attention-internal q/k/v/out truncations sit in the block root
+    with statsbank.scope("attn"):
+        q = pol.dot(xn, p["wq"].astype(x.dtype)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        k = pol.dot(xn, p["wk"].astype(x.dtype)).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+        v = pol.dot(xn, p["wv"].astype(x.dtype)).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     q = shard(q, "batch", "heads", None, None)
@@ -449,13 +456,15 @@ def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
                          "v": shard(vc, "batch", "kv", "kv_seq", None)}
 
     attn = attn.reshape(b, kvh * (h // kvh), s, hd).transpose(0, 2, 1, 3).reshape(b, s, h * hd)
-    x = x + pol.dot(attn, p["wo"].astype(x.dtype))
+    with statsbank.scope("attn"):
+        x = x + pol.dot(attn, p["wo"].astype(x.dtype))
     x = shard(x, "batch", None, None)
 
     aux = jnp.zeros((), jnp.float32)
     xn2 = apply_norm(p["ln2"], x, cfg)
     if block_type == "moe":
-        y, aux = moe_fwd(p["moe"], xn2, cfg, pol)
+        with statsbank.scope("moe"):
+            y, aux = moe_fwd(p["moe"], xn2, cfg, pol)
     else:
         y = mlp_fwd(p["mlp"], xn2, cfg, pol)
     x = x + y

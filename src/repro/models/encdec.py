@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.models import blocks
 from repro.models.blocks import apply_norm, init_norm, mlp_fwd, init_mlp, rope, \
@@ -145,13 +146,18 @@ def encode(params, enc_inputs, cfg: ArchConfig, pol: Policy):
     x = shard(x, "batch", None, None)
     positions = jnp.arange(x.shape[1], dtype=jnp.int32)
 
-    def body(carry, layer_p):
-        y, _, _ = blocks.block_apply("encoder", layer_p, carry, cfg, pol,
-                                     positions, None, 0, "train")
+    n_enc = jax.tree_util.tree_leaves(params["encoder"])[0].shape[0]
+    sites = statsbank.segment_sites("enc", n_enc)
+
+    def body(carry, xs):
+        layer_p, layer_sites = xs
+        with statsbank.segment_ctx("enc", layer_sites):
+            y, _, _ = blocks.block_apply("encoder", layer_p, carry, cfg, pol,
+                                         positions, None, 0, "train")
         return y, None
 
     body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
-    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    x, _ = jax.lax.scan(body_fn, x, (params["encoder"], sites))
     return apply_norm(params["enc_norm"], x, cfg)
 
 
@@ -160,15 +166,20 @@ def cross_kv(params, enc_out, cfg: ArchConfig, pol: Policy):
     b, s, _ = enc_out.shape
     hd, kvh = cfg.resolved_head_dim, cfg.kv_heads
 
-    def one(layer_p):
-        k = pol.dot(enc_out, layer_p["cross"]["wk"].astype(enc_out.dtype))
-        v = pol.dot(enc_out, layer_p["cross"]["wv"].astype(enc_out.dtype))
+    n_dec = jax.tree_util.tree_leaves(params["decoder"])[0].shape[0]
+    sites = statsbank.segment_sites("xkv", n_dec)
+
+    def one(xs):
+        layer_p, layer_sites = xs
+        with statsbank.segment_ctx("xkv", layer_sites):
+            k = pol.dot(enc_out, layer_p["cross"]["wk"].astype(enc_out.dtype))
+            v = pol.dot(enc_out, layer_p["cross"]["wv"].astype(enc_out.dtype))
         k = k.reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
         v = v.reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
         return {"k": shard(k, "batch", "kv", "kv_seq", None),
                 "v": shard(v, "batch", "kv", "kv_seq", None)}
 
-    return jax.lax.map(one, params["decoder"])
+    return jax.lax.map(one, (params["decoder"], sites))
 
 
 def decode_stack(params, dec_tokens, enc_kv, cfg: ArchConfig, pol: Policy,
@@ -186,18 +197,23 @@ def decode_stack(params, dec_tokens, enc_kv, cfg: ArchConfig, pol: Policy,
         return y, c_new
 
     if caches is None:
+        n_dec = jax.tree_util.tree_leaves(params["decoder"])[0].shape[0]
+        sites = statsbank.segment_sites("dec", n_dec)
+
         def body_nc(carry, xs2):
-            layer_p, layer_kv = xs2
-            y, _ = dec_block_apply(layer_p, carry, layer_kv, cfg, pol,
-                                   positions, None, cache_index, mode)
+            layer_p, layer_kv, layer_sites = xs2
+            with statsbank.segment_ctx("dec", layer_sites):
+                y, _ = dec_block_apply(layer_p, carry, layer_kv, cfg, pol,
+                                       positions, None, cache_index, mode)
             return y, None
         body_fn = jax.checkpoint(body_nc, prevent_cse=False) if (cfg.remat and mode == "train") else body_nc
-        x, _ = jax.lax.scan(body_fn, x, (params["decoder"], enc_kv))
+        x, _ = jax.lax.scan(body_fn, x, (params["decoder"], enc_kv, sites))
         new_caches = None
     else:
         x, new_caches = jax.lax.scan(body, x, (params["decoder"], enc_kv, caches))
     x = apply_norm(params["dec_norm"], x, cfg)
-    logits = pol.dot(x, params["head"].astype(x.dtype))
+    with statsbank.scope("head"):
+        logits = pol.dot(x, params["head"].astype(x.dtype))
     return logits, new_caches
 
 

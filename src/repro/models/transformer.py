@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.models import blocks
 from repro.parallel.sharding import shard
@@ -63,37 +64,52 @@ def init_lm(cfg: ArchConfig, key) -> Dict[str, Any]:
 def embed_tokens(params, tokens, cfg: ArchConfig, pol: Policy):
     table = params["embed"]
     if pol.mode in ("s2fp8", "s2fp8_e4m3", "fp8", "fp8_ls"):
-        table = pol.truncate(table)
+        with statsbank.scope("embed"):
+            table = pol.truncate(table)
     x = jnp.take(table, tokens, axis=0)
     return shard(x.astype(cfg.activation_dtype), "batch", None, None)
 
 
 def lm_head(params, x, cfg: ArchConfig, pol: Policy):
     w = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = pol.dot(x, w.astype(x.dtype))
+    with statsbank.scope("head"):
+        logits = pol.dot(x, w.astype(x.dtype))
     return shard(logits, "batch", None, "vocab")
 
 
 def _segment_scan(btype, seg_params, x, cfg, pol, positions, caches,
-                  cache_index, mode):
-    """Scan one homogeneous segment.  caches: stacked per-layer pytree or None."""
+                  cache_index, mode, seg_name: str = "seg"):
+    """Scan one homogeneous segment.  caches: stacked per-layer pytree or None.
+
+    When a StatsBank session is active (jitted train step with delayed
+    stats), the segment's per-layer site states ride through the scan
+    ``xs`` alongside the stacked layer params, so every layer truncates
+    with its own carried (alpha, beta); their refreshed values flow back
+    out through the scan transpose as the bank argument's cotangent.
+    """
+    n_layers = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+    sites = statsbank.segment_sites(seg_name, n_layers)
 
     def body(carry, xs):
         x, aux_sum = carry
         if caches is None:
-            layer_p = xs
-            y, _, aux = blocks.block_apply(btype, layer_p, x, cfg, pol,
-                                           positions, None, cache_index, mode)
+            layer_p, layer_sites = xs
+            with statsbank.segment_ctx(seg_name, layer_sites):
+                y, _, aux = blocks.block_apply(btype, layer_p, x, cfg, pol,
+                                               positions, None, cache_index,
+                                               mode)
             return (y, aux_sum + aux), None
-        layer_p, layer_c = xs
-        y, c_new, aux = blocks.block_apply(btype, layer_p, x, cfg, pol,
-                                           positions, layer_c, cache_index, mode)
+        layer_p, layer_sites, layer_c = xs
+        with statsbank.segment_ctx(seg_name, layer_sites):
+            y, c_new, aux = blocks.block_apply(btype, layer_p, x, cfg, pol,
+                                               positions, layer_c,
+                                               cache_index, mode)
         return (y, aux_sum + aux), c_new
 
     if cfg.remat and mode == "train":
         body = jax.checkpoint(body, prevent_cse=False)
 
-    xs = seg_params if caches is None else (seg_params, caches)
+    xs = (seg_params, sites) if caches is None else (seg_params, sites, caches)
     (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
     return x, aux, new_caches
 
@@ -114,7 +130,7 @@ def forward(params, tokens, cfg: ArchConfig, pol: Policy, *,
         seg_c = None if caches is None else caches[i]
         x, aux, seg_c_new = _segment_scan(
             btype, params["segments"][i], x, cfg, pol, positions,
-            seg_c, cache_index, mode)
+            seg_c, cache_index, mode, seg_name=f"seg{i}:{btype}")
         total_aux = total_aux + aux
         new_caches.append(seg_c_new)
     x = blocks.apply_norm(params["final_norm"], x, cfg)

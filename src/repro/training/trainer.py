@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import s2fp8
+from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.optim.optimizers import Optimizer, global_norm
 
@@ -25,7 +26,8 @@ from repro.optim.optimizers import Optimizer, global_norm
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     schedule: Callable, policy: Policy,
                     track_stats: bool = False,
-                    grad_sync: Optional[Callable] = None):
+                    grad_sync: Optional[Callable] = None,
+                    stats: Optional[statsbank.StatsConfig] = None):
     """loss_fn(params, batch, policy) -> (loss, metrics_dict).
 
     * fp8_ls mode: loss scaled by policy.loss_scale before grad, grads
@@ -35,25 +37,34 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
       default all-reduce is inserted by GSPMD instead.
     * track_stats: returns (mu, m, alpha, beta) of a probe gradient tensor
       (paper Fig. 5 evolution plots).
+    * stats: a ``statsbank.StatsConfig`` enables the jit-carried StatsBank
+      — the returned step grows a ``stats_state`` carry::
+
+          (params, opt_state, stats_state, batch, step)
+              -> (params, opt_state, stats_state, metrics)
+
+      Every Policy truncation reuses its bank entry; the Eq. 3–4 stats
+      reduction runs under ``lax.cond`` only on ``refresh_every`` steps
+      (and the bootstrap step).  The bank is an extra differentiated
+      argument whose gradient IS the refreshed bank (statsbank docstring),
+      so the carry is pure data flow — jit/pjit/scan/remat safe.  Build
+      the initial carry with ``statsbank.init_bank(loss_fn, params,
+      batch, policy, cfg)``.
 
     The numerics backend (ref jnp vs fused Pallas kernels) rides on the
     policy: ``policy.backend`` is validated at Policy construction and
     resolved through core/backend.py inside each truncation.
     """
     scale = policy.loss_scale if policy.mode == "fp8_ls" else 1.0
+    if stats is not None and policy.mode not in ("s2fp8", "s2fp8_e4m3"):
+        raise ValueError(
+            f"StatsBank requires an s2fp8-mode policy, got {policy.mode!r}")
 
     def scaled_loss(params, batch):
         loss, metrics = loss_fn(params, batch, policy)
         return loss * scale, metrics
 
-    def train_step(params, opt_state, batch, step):
-        (loss, metrics), grads = jax.value_and_grad(
-            scaled_loss, has_aux=True)(params, batch)
-        if scale != 1.0:
-            grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
-            loss = loss / scale
-        if grad_sync is not None:
-            grads = grad_sync(grads)
+    def _finish(loss, metrics, grads, params, opt_state, step):
         lr = schedule(step)
         new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
         out = dict(metrics)
@@ -65,7 +76,46 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             out["probe_stats"] = s2fp8.tensor_stats(probe)
         return new_params, new_opt, out
 
-    return train_step
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            scaled_loss, has_aux=True)(params, batch)
+        if scale != 1.0:
+            grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
+            loss = loss / scale
+        if grad_sync is not None:
+            grads = grad_sync(grads)
+        return _finish(loss, metrics, grads, params, opt_state, step)
+
+    if stats is None:
+        return train_step
+
+    def train_step_with_stats(params, opt_state, stats_state, batch, step):
+        def banked_loss(p, bank):
+            with statsbank.bind(bank, step, stats):
+                loss, metrics = loss_fn(p, batch, policy)
+            return loss, metrics
+
+        (loss, metrics), (grads, bank_cot) = jax.value_and_grad(
+            banked_loss, argnums=(0, 1), has_aux=True)(params, stats_state)
+        new_bank = statsbank.merge_updates(stats_state, bank_cot)
+        if grad_sync is not None:
+            grads = grad_sync(grads)
+        metrics = dict(metrics)
+        # sites also refresh on bootstrap (last < 0), not just on cadence;
+        # one O(n_sites) min over the concatenated bookkeeping scalars —
+        # the single non-cond reduction the bank step adds (asserted in
+        # tests/test_statsbank.py::test_zero_stats_reductions_outside_cond)
+        cold = jnp.concatenate(
+            [jnp.ravel(d["last"]) for e in stats_state.values()
+             for d in e.values()])
+        metrics["stats_refreshed"] = jnp.maximum(
+            (step % stats.refresh_every == 0).astype(jnp.float32),
+            (jnp.min(cold) < 0).astype(jnp.float32))
+        new_params, new_opt, out = _finish(loss, metrics, grads, params,
+                                           opt_state, step)
+        return new_params, new_opt, new_bank, out
+
+    return train_step_with_stats
 
 
 def make_eval_step(loss_fn: Callable, policy: Policy):
@@ -79,14 +129,22 @@ class TrainLoop:
     """Host-side loop: prefetch, checkpoint-every-k, auto-resume, watchdog.
 
     Single-host here; the multi-host story is in training/fault.py.
+
+    ``stats_bank``: the StatsBank carry for a step built with
+    ``make_train_step(..., stats=...)``.  It is checkpointed alongside
+    (params, opt_state) and restored by ``maybe_resume`` — a resumed run
+    truncates with warm stats instead of silently bootstrapping cold.
     """
 
     def __init__(self, train_step, params, opt_state, data_fn,
                  ckpt_manager=None, ckpt_every: int = 0,
-                 log_every: int = 10, watchdog_factor: float = 3.0):
-        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+                 log_every: int = 10, watchdog_factor: float = 3.0,
+                 stats_bank=None):
+        donate = (0, 1) if stats_bank is None else (0, 1, 2)
+        self.train_step = jax.jit(train_step, donate_argnums=donate)
         self.params = params
         self.opt_state = opt_state
+        self.stats_bank = stats_bank
         self.data_fn = data_fn
         self.ckpt = ckpt_manager
         self.ckpt_every = ckpt_every
@@ -95,13 +153,21 @@ class TrainLoop:
         self.start_step = 0
         self.history = []
 
+    def _ckpt_tree(self):
+        if self.stats_bank is None:
+            return (self.params, self.opt_state)
+        return (self.params, self.opt_state, self.stats_bank)
+
     def maybe_resume(self):
         if self.ckpt is None:
             return
         latest = self.ckpt.latest_step()
         if latest is not None:
-            (self.params, self.opt_state), _ = self.ckpt.restore(
-                (self.params, self.opt_state), latest)
+            restored, _ = self.ckpt.restore(self._ckpt_tree(), latest)
+            if self.stats_bank is None:
+                self.params, self.opt_state = restored
+            else:
+                self.params, self.opt_state, self.stats_bank = restored
             self.start_step = latest
             print(f"[trainer] resumed from step {latest}")
 
@@ -111,8 +177,13 @@ class TrainLoop:
         for step in range(self.start_step, steps):
             batch = self.data_fn(step)
             t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self.train_step(
-                self.params, self.opt_state, batch, jnp.int32(step))
+            if self.stats_bank is None:
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch, jnp.int32(step))
+            else:
+                self.params, self.opt_state, self.stats_bank, metrics = \
+                    self.train_step(self.params, self.opt_state,
+                                    self.stats_bank, batch, jnp.int32(step))
             metrics = {k: (float(v) if hasattr(v, "item") and getattr(v, 'ndim', 1) == 0 else v)
                        for k, v in metrics.items()}
             dt = time.perf_counter() - t0
@@ -129,8 +200,7 @@ class TrainLoop:
                          f"lr {metrics['lr']:.2e} t {dt*1e3:.0f}ms")
             if self.ckpt is not None and self.ckpt_every and \
                     (step + 1) % self.ckpt_every == 0:
-                self.ckpt.save(step + 1, (self.params, self.opt_state),
-                               blocking=False)
+                self.ckpt.save(step + 1, self._ckpt_tree(), blocking=False)
         if self.ckpt is not None:
             self.ckpt.wait()
         return self.history

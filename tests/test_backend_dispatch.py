@@ -179,6 +179,20 @@ def test_blocked_2d_roundtrip_exact():
         np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
 
 
+def test_blocked_2d_non_dividing_block_width():
+    """A block width that does not divide the flattened lane must not
+    interleave padding mid-row — the lane widens instead, so the
+    flatten-and-slice inverse stays exact and truncation matches the ref."""
+    x = jax.random.normal(jax.random.PRNGKey(17), (3, 5, 701)) * 1e-4
+    for block in [(256, 384), (8, 640), (1024, 512)]:
+        x2 = dispatch.as_blocked_2d(x, block)
+        back = dispatch.from_blocked_2d(x2, x.shape)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+        out = dispatch.truncate_nd(x, block=block)
+        ref_out = nbackend.get_backend("ref").truncate(x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))
+
+
 # ---------------------------------------------------------------------------
 # delayed stats
 # ---------------------------------------------------------------------------
@@ -228,6 +242,23 @@ def test_delayed_stats_saturate_not_overflow_on_narrow_distributions():
     yp, _ = nbackend.truncate_delayed(drifted, stats, refresh=False,
                                       backend="pallas")
     np.testing.assert_array_equal(np.asarray(yp), np.asarray(yr))
+
+
+def test_quantize_stale_stats_saturates_on_both_backends():
+    """quantize(stats=...) with stale stats after upward drift must clamp
+    the payload at e5m2 max finite (no inf) — identically on ref and
+    pallas (the apply kernel mirrors the reference clamp)."""
+    noise = 1.0 + 1e-3 * jax.random.normal(jax.random.PRNGKey(18), (64,))
+    x = 3.0 * noise
+    stats = nbackend.get_backend("ref").compute_stats(x)
+    drifted = x * 1.02
+    payloads = []
+    for name in ("ref", "pallas"):
+        t = nbackend.get_backend(name).quantize(drifted, stats=stats)
+        p32 = np.asarray(t.payload).astype(np.float32)
+        assert np.isfinite(p32).all(), name
+        payloads.append(np.asarray(t.payload).view(np.uint8))
+    np.testing.assert_array_equal(payloads[0], payloads[1])
 
 
 def test_delayed_stats_accuracy_under_drift():
