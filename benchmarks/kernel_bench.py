@@ -82,7 +82,7 @@ def bench_truncate(results):
         })
 
 
-def bench_statsbank(results):
+def bench_statsbank(results, smoke=False):
     """The stats lane: full train-step time, exact stats (a reduction per
     truncation, every step) vs the jit-carried StatsBank (reductions under
     ``lax.cond``, skipped on non-refresh steps).  Times a non-refresh step
@@ -97,7 +97,7 @@ def bench_statsbank(results):
     # small batch through big weights: the per-step cost is the WEIGHT
     # truncations (the tensors whose stats the bank amortizes), not MXU
     # flops — the shape of the win the subsystem targets
-    n_tensors, dim, batch = 4, 1024, 16
+    n_tensors, dim, batch = (2, 256, 8) if smoke else (4, 1024, 16)
     params = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
                                          (dim, dim)) * 1e-4
               for i in range(n_tensors)}
@@ -139,14 +139,137 @@ def bench_statsbank(results):
     })
 
 
-def main():
+def modeled_hbm_bytes(mode: str, m: int, k: int, n: int) -> dict:
+    """Modeled per-train-step HBM traffic of ONE GEMM's numerics dataflow
+    (operand/result tensor crossings only; the MXU-internal traffic is
+    common to both).  See kernels/README.md, "payload-domain training
+    dataflow" for the crossing-by-crossing derivation."""
+    mk, kn, mn = m * k, k * n, m * n
+    if mode == "fig4":
+        # fwd: read a (4) + write At (4), same for b; dot reads At, Bt (4)
+        # and writes the raw f32 output (4); the separate out truncation
+        # reads it back + writes (4+4); At, Bt persist as residuals.
+        fwd = 8 * mk + 8 * kn + 4 * (mk + kn) + 12 * mn
+        # bwd: trunc g (8); dA GEMM reads g_t + Bt (4) + writes raw dA
+        # (4), trunc dA read+write (8); dB likewise
+        bwd = 8 * mn + 4 * (mn + kn) + 12 * mk + 4 * (mk + mn) + 12 * kn
+    elif mode == "payload":
+        # fwd: quantize a: read 4B, write 1B payload; GEMM streams payloads
+        # at 1B, epilogue writes the truncated output in the same pass.
+        fwd = 5 * mk + 5 * kn + 1 * (mk + kn) + 4 * mn
+        # bwd: quantize g (4+1); dA GEMM streams qg + qb (1B) with fused
+        # dA truncation epilogue (write 4); dB likewise
+        bwd = 5 * mn + (mn + kn) + 4 * mk + (mk + mn) + 4 * kn
+    else:
+        raise ValueError(mode)
+    total = fwd + bwd
+    return {"total_bytes": total,
+            "bytes_per_element": total / (mk + kn + mn)}
+
+
+def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
+    """The payload-domain training GEMM lane: full fwd+bwd step over one
+    ``Policy.dot``, three ways —
+
+      * ``fig4_exact``   — the pre-qdot default: composed Fig. 4 chain,
+        exact stats (a reduction per truncation site, every call);
+      * ``fig4_bank``    — the Fig. 4 chain inside a StatsBank session
+        (steady-state non-refresh step);
+      * ``payload_bank`` — ``qdot_train``: payloads + fused epilogue +
+        NT/TN payload backward, bank stats (steady state).
+
+    The acceptance comparison is payload_bank vs the jitted Fig. 4 chain.
+    Off-TPU the backends route to the jnp engine, so the modeled HBM
+    bytes/element column carries the TPU story (1- vs 4-byte streaming).
+    """
+    from repro.core import statsbank
+    from repro.core.policy import make_policy
+
+    key = jax.random.PRNGKey(42)
+    iters = 2 if smoke else 5
+
+    def loss_fn(params, _batch, pol_):
+        y = pol_.dot(params["a"], params["b"])
+        return jnp.sum(y * y), {}
+
+    for n in sizes:
+        a = jax.random.normal(key, (n, n)) * 1e-4
+        b = jax.random.normal(jax.random.fold_in(key, 1), (n, n)) * 1e-4
+        params = {"a": a, "b": b}
+        scfg = statsbank.StatsConfig(refresh_every=16)
+
+        pol_exact = make_policy("s2fp8", gemm_mode="fig4")
+        grad_exact = jax.jit(jax.value_and_grad(
+            lambda p: loss_fn(p, None, pol_exact)[0]))
+        exact_us = time_jitted(grad_exact, params, iters=iters)
+
+        lane = {"n": n, "fig4_exact_us": exact_us}
+        for gm in ("fig4", "payload"):
+            pol = make_policy("s2fp8", gemm_mode=gm)
+            bank = statsbank.init_bank(loss_fn, params, None, pol, scfg)
+
+            @jax.jit
+            def banked(p, bk, step, pol=pol):
+                def f(p_, bk_):
+                    with statsbank.bind(bk_, step, scfg):
+                        l, _ = loss_fn(p_, None, pol)
+                    return l
+                loss, (g, up) = jax.value_and_grad(f, argnums=(0, 1))(p, bk)
+                return loss, g, statsbank.merge_updates(bk, up)
+
+            _, _, bank = jax.block_until_ready(
+                banked(params, bank, jnp.int32(0)))  # bootstrap refresh
+            step = jnp.int32(1)                       # steady state
+            lane[f"{gm}_bank_us"] = time_jitted(
+                lambda p: banked(p, bank, step)[0], params, iters=iters)
+
+        flop = 3 * 2 * n ** 3                         # fwd + dA + dB GEMMs
+        lane["payload_gflops"] = flop / (lane["payload_bank_us"] * 1e-6) / 1e9
+        lane["payload_vs_fig4_exact"] = exact_us / lane["payload_bank_us"]
+        lane["payload_vs_fig4_bank"] = (lane["fig4_bank_us"]
+                                        / lane["payload_bank_us"])
+        lane["modeled_hbm_bytes_per_elt"] = {
+            m_: modeled_hbm_bytes(m_, n, n, n)["bytes_per_element"]
+            for m_ in ("fig4", "payload")}
+        emit(f"gemm_train_fig4_exact_{n}", exact_us, "exact-stats chain")
+        emit(f"gemm_train_fig4_bank_{n}", lane["fig4_bank_us"],
+             "bank steady state")
+        emit(f"gemm_train_payload_bank_{n}", lane["payload_bank_us"],
+             f"{lane['payload_gflops']:.1f}GFLOP/s "
+             f"{lane['payload_vs_fig4_exact']:.2f}x vs fig4-exact")
+        results["gemm"].append(lane)
+
+
+def main(smoke: bool = False):
     results = {"backend": nbackend.get_backend().name,
                "platform": jax.default_backend(),
-               "truncate": [], "quantize": [], "matmul": [], "stats": []}
+               "truncate": [], "quantize": [], "matmul": [], "stats": [],
+               "gemm": []}
     key = jax.random.PRNGKey(0)
+
+    if smoke:
+        # CI regression gate: the two train-step lanes (gemm + stats) on
+        # tiny shapes — seconds, not minutes; numbers are not recorded.
+        # (The truncate/quantize/matmul microlanes are covered by the unit
+        # tests that run earlier in the same CI job.)
+        bench_gemm(results, sizes=(256,), smoke=True)
+        bench_statsbank(results, smoke=True)
+        # falsifiable structure checks: every expected lane must have been
+        # emitted with finite timings (a lane that silently skipped its
+        # work, or a refactor that dropped one, fails the build here)
+        assert len(results["gemm"]) == 1 and len(results["stats"]) == 1, \
+            {k: len(v) for k, v in results.items() if isinstance(v, list)}
+        import math as _math
+        for want in ("fig4_exact_us", "fig4_bank_us", "payload_bank_us"):
+            v = results["gemm"][0][want]
+            assert _math.isfinite(v), (want, v)
+        assert _math.isfinite(results["stats"][0]["bank_step_us"])
+        print("# smoke ok (no JSON written)")
+        return
 
     bench_truncate(results)
     bench_statsbank(results)
+    bench_gemm(results)
 
     for n in [1 << 16, 1 << 20, 1 << 22]:
         x = jax.random.normal(key, (n,)) * 1e-5
@@ -179,4 +302,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape lane sweep for CI (no JSON output)")
+    main(smoke=ap.parse_args().smoke)

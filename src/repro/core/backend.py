@@ -2,8 +2,10 @@
 
 Every S2FP8 operation the framework performs — stats, quantize, dequantize,
 the Eq. 5 truncation that ``Policy`` wraps around each GEMM, and the
-payload-domain GEMM — goes through a :class:`NumericsBackend`.  Two engines
-ship:
+payload-domain GEMM (``qmatmul``: NN/NT/TN operand layouts, optional fused
+Eq. 5 output epilogue, e5m2/e4m3 payloads; ``qdot_general`` maps restricted
+higher-rank contractions onto it) — goes through a
+:class:`NumericsBackend`.  Two engines ship:
 
   * ``"ref"``    — the pure-jnp implementation in core/s2fp8.py (today's
     semantics, the semantic ground truth, and the fast CPU path);
@@ -89,7 +91,8 @@ class NumericsBackend:
                                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         raise NotImplementedError
 
-    def quantize(self, x: jnp.ndarray, *, stats=None) -> S2FP8Tensor:
+    def quantize(self, x: jnp.ndarray, *, stats=None,
+                 fmt: str = "e5m2") -> S2FP8Tensor:
         raise NotImplementedError
 
     def dequantize(self, t: S2FP8Tensor, dtype=jnp.float32) -> jnp.ndarray:
@@ -99,11 +102,85 @@ class NumericsBackend:
                  fmt: str = "e5m2") -> jnp.ndarray:
         raise NotImplementedError
 
-    def qmatmul(self, a: S2FP8Tensor, b: S2FP8Tensor) -> jnp.ndarray:
+    def qmatmul(self, a: S2FP8Tensor, b: S2FP8Tensor, *, layout: str = "nn",
+                epilogue_stats=None, fmt: str = "e5m2") -> jnp.ndarray:
+        """Payload-domain GEMM on 2-D payloads.
+
+        ``layout`` selects transposed operand consumption ("nn"/"nt"/"tn",
+        kernels/ref.py ``GEMM_CONTRACT``) — the backward GEMMs of
+        core/qdot.py read the forward's saved payloads without
+        materializing a transpose.  ``epilogue_stats=(alpha, beta)`` fuses
+        the output site's Eq. 5 truncation into the GEMM epilogue
+        (``fmt`` = the truncation's payload format)."""
         raise NotImplementedError
+
+    def qdot_general(self, a: S2FP8Tensor, b: S2FP8Tensor, dimension_numbers,
+                     *, epilogue_stats=None, fmt: str = "e5m2") -> jnp.ndarray:
+        """General-rank payload-domain contraction.
+
+        Maps a restricted ``lax.dot_general``-style contraction — single
+        contracting dim sitting first or last on each operand, no batch
+        dims — onto the 2-D ``qmatmul`` via payload reshapes (1-byte
+        moves) and a layout pick.  Raises ``ValueError`` for contractions
+        outside that family; callers gate on
+        :func:`qdot_general_supported`."""
+        plan = plan_qdot_general(a.shape, b.shape, dimension_numbers)
+        if plan is None:
+            raise ValueError(
+                f"qdot_general cannot map dimension_numbers "
+                f"{dimension_numbers} on {a.shape} x {b.shape} onto a "
+                f"payload GEMM; gate with qdot_general_supported()")
+        layout, a2_shape, b2_shape, out_shape = plan
+        y = self.qmatmul(a.reshape(a2_shape), b.reshape(b2_shape),
+                         layout=layout, epilogue_stats=epilogue_stats,
+                         fmt=fmt)
+        return y.reshape(out_shape)
 
     def __repr__(self):
         return f"<NumericsBackend {self.name!r}>"
+
+
+def plan_qdot_general(a_shape, b_shape, dimension_numbers):
+    """(layout, a2_shape, b2_shape, out_shape) mapping a restricted
+    dot_general onto one 2-D payload GEMM, or None when unsupported.
+
+    Supported: a single contracting dim per operand, positioned first or
+    last (so the remaining dims flatten contiguously), and no batch dims.
+    (first, last) on (a, b) — the "tt" case — has no kernel layout and
+    returns None.
+    """
+    (ca, cb), (batch_a, batch_b) = dimension_numbers
+    if batch_a or batch_b or len(ca) != 1 or len(cb) != 1:
+        return None
+    ca, cb = ca[0], cb[0]
+    if ca not in (0, len(a_shape) - 1) or cb not in (0, len(b_shape) - 1):
+        return None
+    a_last = ca == len(a_shape) - 1
+    b_first = cb == 0
+    if not a_last and not b_first:
+        return None                      # "tt": no layout variant
+    k = a_shape[ca]
+    if k != b_shape[cb]:
+        return None
+    a_rest = tuple(d for i, d in enumerate(a_shape) if i != ca)
+    b_rest = tuple(d for i, d in enumerate(b_shape) if i != cb)
+    m = 1
+    for d in a_rest:
+        m *= d
+    n = 1
+    for d in b_rest:
+        n *= d
+    if a_last and b_first:
+        layout, a2, b2 = "nn", (m, k), (k, n)
+    elif a_last:                         # b contracts on its last dim
+        layout, a2, b2 = "nt", (m, k), (n, k)
+    else:                                # a contracts on its first dim
+        layout, a2, b2 = "tn", (k, m), (k, n)
+    return layout, a2, b2, a_rest + b_rest
+
+
+def qdot_general_supported(a_shape, b_shape, dimension_numbers) -> bool:
+    return plan_qdot_general(a_shape, b_shape, dimension_numbers) is not None
 
 
 def _make_ref_truncate():
@@ -138,8 +215,8 @@ class RefBackend(NumericsBackend):
     def compute_stats_partials(self, x):
         return s2fp8.compute_stats_partials_jit(x)
 
-    def quantize(self, x, *, stats=None):
-        return s2fp8.quantize(x, stats=stats)
+    def quantize(self, x, *, stats=None, fmt: str = "e5m2"):
+        return s2fp8.quantize(x, stats=stats, fmt=fmt)
 
     def dequantize(self, t, dtype=jnp.float32):
         return s2fp8.dequantize(t, dtype)
@@ -149,10 +226,16 @@ class RefBackend(NumericsBackend):
             stats = self.compute_stats(x, fmt=fmt)
         return _ref_truncate(x, stats, fmt=fmt)
 
-    def qmatmul(self, a, b):
+    def qmatmul(self, a, b, *, layout: str = "nn", epilogue_stats=None,
+                fmt: str = "e5m2"):
         from repro.kernels import ref
-        return ref.s2fp8_matmul_ref(a.payload, a.alpha, a.beta,
-                                    b.payload, b.alpha, b.beta)
+        y = ref.s2fp8_matmul_ref(a.payload, a.alpha, a.beta,
+                                 b.payload, b.alpha, b.beta, layout=layout)
+        if epilogue_stats is not None:
+            # the "epilogue" through this engine's pinned truncate program
+            # — bitwise-comparable with a separate output truncation
+            y = self.truncate(y, stats=epilogue_stats, fmt=fmt)
+        return y
 
 
 class PallasBackend(NumericsBackend):
@@ -201,17 +284,17 @@ class PallasBackend(NumericsBackend):
         return dispatch.stats_partials_nd(x, block=self.block,
                                           interpret=self.interpret)
 
-    def quantize(self, x, *, stats=None):
+    def quantize(self, x, *, stats=None, fmt: str = "e5m2"):
         from repro.kernels import dispatch
         # exact mode: stats from the shared compiled reduction, so stored
         # (alpha, beta) match RefBackend.quantize and this backend's own
         # compute_stats bit-for-bit; fused mode keeps the reduction in-kernel
         if stats is None and self.stats_mode == "exact":
-            stats = s2fp8.compute_stats_jit(x)
-        payload, alpha, beta = dispatch.quant_nd(x, stats=stats,
+            stats = s2fp8.compute_stats_jit(x, target_max=_TARGET_MAX[fmt])
+        payload, alpha, beta = dispatch.quant_nd(x, stats=stats, fmt=fmt,
                                                  block=self.block,
                                                  interpret=self.interpret)
-        return S2FP8Tensor(payload=payload, alpha=alpha, beta=beta)
+        return S2FP8Tensor(payload=payload, alpha=alpha, beta=beta, fmt=fmt)
 
     def dequantize(self, t, dtype=jnp.float32):
         from repro.kernels import dispatch
@@ -226,11 +309,13 @@ class PallasBackend(NumericsBackend):
                                     fused_stats=(self.stats_mode == "fused"),
                                     block=self.block, interpret=self.interpret)
 
-    def qmatmul(self, a, b):
+    def qmatmul(self, a, b, *, layout: str = "nn", epilogue_stats=None,
+                fmt: str = "e5m2"):
         from repro.kernels import dispatch
         return dispatch.qmatmul_nd(a.payload, a.alpha, a.beta,
                                    b.payload, b.alpha, b.beta,
-                                   interpret=self.interpret)
+                                   layout=layout, epilogue_stats=epilogue_stats,
+                                   fmt=fmt, interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------

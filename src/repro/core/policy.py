@@ -30,10 +30,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend as nbackend
+from repro.core import qdot as qdot_mod
 from repro.core import s2fp8
 from repro.core import statsbank
 
 MODES = ("fp32", "bf16", "fp8", "fp8_ls", "s2fp8", "s2fp8_e4m3")
+# How s2fp8-mode GEMMs execute (see core/qdot.py):
+#   "fig4"    — the composed truncation chain around an f32 GEMM (three
+#               f32-in/f32-out passes; semantic ground truth);
+#   "payload" — qdot_train: operands quantized once to FP8 payloads, the
+#               fused dequant-GEMM with an Eq. 5 output epilogue, NT/TN
+#               payload backward (1 byte/element operand streaming);
+#   "auto"    — payload where the fused kernels are the engine (pallas
+#               backends), fig4 on the ref engine.
+GEMM_MODES = ("auto", "payload", "fig4")
 
 
 def _identity(x):
@@ -67,6 +77,34 @@ def _bf16_cast(x):
     return x.astype(jnp.bfloat16)
 
 
+@functools.lru_cache(maxsize=None)
+def _einsum_is_matmul(spec: str) -> bool:
+    """True for two-operand specs of the dense-layer family
+    ``"...k,kn->...n"`` — explicit ("bsd,df->bsf") or ellipsis
+    ("...d,df->...f") batch dims — the shapes ``qdot_train`` executes
+    payload-domain.  Batched/multi-contraction specs return False and
+    keep the composed Fig. 4 chain."""
+    if "->" not in spec:
+        return False
+    lhs, out = spec.replace(" ", "").split("->")
+    parts = lhs.split(",")
+    if len(parts) != 2:
+        return False
+    la, lb = parts
+    if len(lb) != 2 or "." in lb:
+        return False
+    k, n = lb
+    if la.startswith("..."):
+        la = la[3:]
+        if not (out.startswith("...") and la):
+            return False
+        out = out[3:]
+    if "." in la or "." in out or len(set(la)) != len(la):
+        return False
+    return (k != n and la[-1] == k and n not in la
+            and out == la[:-1] + n)
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
     """Numeric execution policy for all bilinear ops in a model."""
@@ -89,6 +127,10 @@ class Policy:
     # "auto" -> pallas on TPU, ref elsewhere; both produce bitwise-identical
     # truncations, so the choice is an execution detail, not a semantic one.
     backend: str = "auto"
+    # GEMM execution for the s2fp8 modes (GEMM_MODES above).  With shared
+    # (bank) stats the two paths are bitwise-identical on the forward value
+    # (tests/test_qdot_train.py), so this too is an execution detail.
+    gemm_mode: str = "auto"
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -98,6 +140,18 @@ class Policy:
             raise ValueError(
                 f"unknown numerics backend {self.backend!r}; registered: "
                 f"{('auto',) + nbackend.available_backends()}")
+        if self.gemm_mode not in GEMM_MODES:
+            raise ValueError(f"unknown gemm_mode {self.gemm_mode!r}; "
+                             f"want one of {GEMM_MODES}")
+        if self.gemm_mode == "payload" and (
+                not self.truncate_output or self.output_dtype is not None):
+            # refuse rather than silently downgrade an explicit request:
+            # the payload path fuses the output truncation (needs
+            # truncate_output) and accumulates/emits f32 (the bf16
+            # output_dtype lever belongs to the fig4 chain)
+            raise ValueError(
+                "gemm_mode='payload' requires truncate_output=True and "
+                "output_dtype=None; use gemm_mode='auto' or 'fig4'")
 
     # -- operand / output transforms ------------------------------------
     @property
@@ -122,6 +176,30 @@ class Policy:
             return jnp.bfloat16
         return jnp.float32
 
+    @property
+    def _fmt(self) -> str:
+        return "e4m3" if self.mode == "s2fp8_e4m3" else "e5m2"
+
+    @property
+    def uses_payload_gemm(self) -> bool:
+        """Whether s2fp8 GEMMs route through ``qdot_train``
+        (core/qdot.py).  Requires ``truncate_output`` (the payload path
+        fuses the output truncation as a kernel epilogue — Fig. 4's full
+        dataflow) and the default f32 GEMM-boundary dtype (the kernel
+        accumulates and emits f32, paper-strict — the bf16
+        ``output_dtype`` lever belongs to the fig4 chain); "auto"
+        resolves to payload on the pallas engines and fig4 on ref."""
+        if self.mode not in ("s2fp8", "s2fp8_e4m3") or not self.truncate_output \
+                or self.output_dtype is not None:
+            return False                 # "payload" here is unreachable:
+        if self.gemm_mode != "auto":     # __post_init__ rejects the combo
+            return self.gemm_mode == "payload"
+        return isinstance(self.backend_obj, nbackend.PallasBackend)
+
+    def _qdot_routable(self, a, b) -> bool:
+        return (self.uses_payload_gemm and b.ndim == 2 and a.ndim >= 1
+                and a.shape[-1] == b.shape[0])
+
     def truncate(self, x: jnp.ndarray) -> jnp.ndarray:
         """Tensor-level truncation at op boundaries (bidirectional: the
         cotangent is truncated too for fp8/s2fp8 modes)."""
@@ -134,11 +212,23 @@ class Policy:
 
     # -- bilinear ops -----------------------------------------------------
     def dot(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        if self._qdot_routable(a, b):
+            y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
+            return y.astype(a.dtype)
         w = self._wrap
         y = jnp.dot(w(a), w(b), preferred_element_type=self.accum_dtype)
         return self._wrap_out(y).astype(a.dtype)
 
     def dot_general(self, a, b, dimension_numbers) -> jnp.ndarray:
+        # one support-check source: the backend planner.  Of the plannable
+        # family, the "nn" orientation is the [..., K] x [K, N] shape
+        # qdot_train's NT/TN backward is built for; other contractions
+        # keep the composed Fig. 4 chain.
+        plan = nbackend.plan_qdot_general(a.shape, b.shape, dimension_numbers)
+        if (plan is not None and plan[0] == "nn"
+                and self._qdot_routable(a, b)):
+            y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
+            return y.astype(a.dtype)
         w = self._wrap
         y = jax.lax.dot_general(
             w(a), w(b), dimension_numbers, preferred_element_type=self.accum_dtype
@@ -146,6 +236,11 @@ class Policy:
         return self._wrap_out(y).astype(a.dtype)
 
     def einsum(self, spec: str, *operands) -> jnp.ndarray:
+        if (len(operands) == 2 and _einsum_is_matmul(spec)
+                and self._qdot_routable(*operands)):
+            a, b = operands
+            y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
+            return y.astype(a.dtype)
         w = self._wrap
         y = jnp.einsum(
             spec, *[w(o) for o in operands], preferred_element_type=self.accum_dtype
@@ -168,30 +263,32 @@ class Policy:
         run the backend's fused dequant-matmul (the paper §5 "tensor
         processing engine" — operands stream at 1 byte/element).  Forward
         value only (no custom VJP): intended for inference/serving paths;
-        training GEMMs go through ``dot``'s Fig. 4 wrapping."""
-        if self.mode == "s2fp8_e4m3":
-            # storage payloads are e5m2-only today (ROADMAP: e4m3 backend
-            # parity) — refuse rather than silently compute in e5m2
-            raise NotImplementedError(
-                "qdot has no e4m3 storage path yet; use mode='s2fp8' or dot()")
-        if self.mode != "s2fp8":
+        training GEMMs go through ``dot``, which routes payload-domain via
+        ``qdot_train`` when ``gemm_mode`` resolves to "payload".  Both
+        s2fp8 storage formats are supported (e4m3 rides the same kernels
+        via the ``fmt``/``qdtype`` plumbing)."""
+        if self.mode not in ("s2fp8", "s2fp8_e4m3"):
             return self.dot(a, b)
+        fmt = self._fmt
         be = self.backend_obj
         sess = statsbank.current_session()
         if sess is not None:
             # bank-carried operand stats: quantization is pure elementwise
             # (no per-call reduction); serving keeps the bank warm via
             # statsbank.HostStatsBank
-            sa = sess.operand_stats(a, fmt="e5m2")
-            sb = sess.operand_stats(b, fmt="e5m2")
-            y = be.qmatmul(be.quantize(a, stats=sa), be.quantize(b, stats=sb))
+            sa = sess.operand_stats(a, fmt=fmt)
+            sb = sess.operand_stats(b, fmt=fmt)
+            y = be.qmatmul(be.quantize(a, stats=sa, fmt=fmt),
+                           be.quantize(b, stats=sb, fmt=fmt))
         else:
-            y = be.qmatmul(be.quantize(a), be.quantize(b))
+            y = be.qmatmul(be.quantize(a, fmt=fmt), be.quantize(b, fmt=fmt))
         return self._wrap_out(y).astype(a.dtype)
 
 
 def make_policy(mode: str, loss_scale: Optional[float] = None,
-                backend: Optional[str] = None) -> Policy:
+                backend: Optional[str] = None,
+                gemm_mode: Optional[str] = None) -> Policy:
     return Policy(mode=mode,
                   loss_scale=loss_scale if loss_scale is not None else 1.0,
-                  backend=backend or "auto")
+                  backend=backend or "auto",
+                  gemm_mode=gemm_mode or "auto")

@@ -1,0 +1,199 @@
+"""qdot_train: the differentiable payload-domain training GEMM.
+
+The paper's §5 tensor processing engine consumes FP8 payloads plus
+(alpha, beta) directly; this module makes that the *training* execution of
+``Policy.dot`` (and friends) instead of the composed Fig. 4 chain of three
+f32-in/f32-out truncation passes around an f32 GEMM.
+
+Forward::
+
+    qA = quantize(A, bank stats)      # elementwise, 1-byte HBM write
+    qB = quantize(B, bank stats)
+    Y  = qmatmul(qA, qB, epilogue_stats=out-site stats)
+         #  payload tiles stream HBM->VMEM at 1 B/elt, dequant on the VPU,
+         #  f32 MXU accumulation, Eq. 5 epilogue on the output tile in VMEM
+
+and the residuals saved for backward are the *payloads* plus scalar stats
+— a ~4x activation-residual cut vs the Fig. 4 chain's truncated-f32
+operands.
+
+Backward (paper Fig. 4's two transposed GEMMs, payload-domain)::
+
+    qG = quantize(g, cotangent-site stats)        # truncate+store, 1 pass
+    dA = qmatmul(qG, qB, layout="nt", epilogue_stats=a-site bwd stats)
+    dB = qmatmul(qA, qG, layout="tn", epilogue_stats=b-site bwd stats)
+
+The NT/TN layouts read the saved payloads through swapped BlockSpec index
+maps — no transpose is materialized.
+
+Numerics anchor: ``dequantize(quantize(x, s)) == truncate(x, s)``
+elementwise, so with shared (bank) stats the payload-domain forward equals
+the Fig. 4 chain *bitwise* — asserted ref-vs-pallas in
+tests/test_qdot_train.py.  Stale bank stats saturate at the format max
+inside quantize and the epilogue (never inf).
+
+Stats lifecycle: inside a StatsBank session each ``qdot_train`` call is
+one bank node with six per-direction states (statsbank.GEMM_DIRS); all
+refreshes run under ``lax.cond`` on the session cadence, so steady-state
+steps execute ZERO stats reductions and exactly three payload GEMMs +
+three elementwise quantizations per node.  Outside a session the exact
+path quantizes with fresh per-call stats (eval / ad-hoc callers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as nbackend
+from repro.core import s2fp8
+from repro.core import statsbank
+
+
+def _epilogue_qmatmul(qa, qb, layout, st, pred_f, step_f, cfg, fmt,
+                      backend, target_max):
+    """Sited payload GEMM with fused output truncation.
+
+    Steady state (no refresh due): ONE kernel launch — the Eq. 5 epilogue
+    runs on each accumulated output tile in VMEM with the site's carried
+    (alpha, beta).  Refresh steps take the other ``lax.cond`` branch: raw
+    GEMM, stats refresh from the raw output, elementwise truncate
+    (refresh-then-use, same cadence semantics as ``Session.truncate``).
+    Returns (y, new_state).
+    """
+    be = nbackend.get_backend(backend)
+    need = jnp.logical_or(pred_f > 0, st["last"] < 0)
+
+    def _refresh(_):
+        y_raw = be.qmatmul(qa, qb, layout=layout)
+        new = statsbank.refresh_state(
+            y_raw, st, step_f, ema_decay=cfg.ema_decay,
+            target_max=target_max, backend=backend, axis_name=cfg.axis_name)
+        return be.truncate(y_raw, stats=(new["alpha"], new["beta"]),
+                           fmt=fmt), new
+
+    def _fused(_):
+        y = be.qmatmul(qa, qb, layout=layout,
+                       epilogue_stats=(st["alpha"], st["beta"]), fmt=fmt)
+        return y, st
+
+    return jax.lax.cond(need, _refresh, _fused, None)
+
+
+@functools.lru_cache(maxsize=None)
+def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig):
+    """custom_vjp payload GEMM over (a2, b, entry, pred_f, step_f); cached
+    per (backend, fmt, cfg) so the callable is stable under jit tracing.
+    The bank entry is a differentiated argument whose cotangent is the
+    refreshed entry (the StatsBank update idiom)."""
+    target_max = s2fp8.FMT_TARGET_MAX[fmt]
+
+    def _fwd(a, b, entry, pred_f, step_f):
+        be = nbackend.get_backend(backend)
+        aa, ab, new_af = statsbank.maybe_refresh(
+            a, entry["a.fwd"], pred_f, step_f, cfg, target_max, backend)
+        ba, bb, new_bf = statsbank.maybe_refresh(
+            b, entry["b.fwd"], pred_f, step_f, cfg, target_max, backend)
+        qa = be.quantize(a, stats=(aa, ab), fmt=fmt)
+        qb = be.quantize(b, stats=(ba, bb), fmt=fmt)
+        y, new_of = _epilogue_qmatmul(qa, qb, "nn", entry["out.fwd"],
+                                      pred_f, step_f, cfg, fmt, backend,
+                                      target_max)
+        # Residuals: 1-byte payloads + scalar site states.  The f32
+        # operands are NOT saved — asserted by shape inspection in
+        # tests/test_qdot_train.py.
+        res = (qa, qb, new_af, new_bf, new_of, entry["a.bwd"],
+               entry["b.bwd"], entry["out.bwd"], pred_f, step_f)
+        return y, res
+
+    @jax.custom_vjp
+    def qdot(a, b, entry, pred_f, step_f):
+        return _fwd(a, b, entry, pred_f, step_f)[0]
+
+    def _bwd(res, g):
+        (qa, qb, new_af, new_bf, new_of, a_bwd, b_bwd, out_bwd,
+         pred_f, step_f) = res
+        be = nbackend.get_backend(backend)
+        ga, gb, new_ob = statsbank.maybe_refresh(
+            g, out_bwd, pred_f, step_f, cfg, target_max, backend)
+        qg = be.quantize(g, stats=(ga, gb), fmt=fmt)
+        dA, new_ab = _epilogue_qmatmul(qg, qb, "nt", a_bwd, pred_f, step_f,
+                                       cfg, fmt, backend, target_max)
+        dB, new_bb = _epilogue_qmatmul(qa, qg, "tn", b_bwd, pred_f, step_f,
+                                       cfg, fmt, backend, target_max)
+        entry_cot = {"a.fwd": new_af, "a.bwd": new_ab, "b.fwd": new_bf,
+                     "b.bwd": new_bb, "out.fwd": new_of, "out.bwd": new_ob}
+        return (dA, dB, entry_cot,
+                jnp.zeros_like(pred_f), jnp.zeros_like(step_f))
+
+    qdot.defvjp(_fwd, _bwd)
+    qdot.fwd_impl = _fwd      # residual-inspection hook (tests)
+    return qdot
+
+
+@functools.lru_cache(maxsize=None)
+def _qdot_exact(backend: Optional[str], fmt: str):
+    """Sessionless variant: fresh exact stats per call (one reduction per
+    tensor, like the exact-stats Fig. 4 chain) but still payload-domain
+    compute and payload residuals."""
+    target_max = s2fp8.FMT_TARGET_MAX[fmt]
+
+    def _fwd(a, b):
+        be = nbackend.get_backend(backend)
+        qa = be.quantize(a, fmt=fmt)
+        qb = be.quantize(b, fmt=fmt)
+        y_raw = be.qmatmul(qa, qb)
+        so = be.compute_stats(y_raw, fmt=fmt)
+        return be.truncate(y_raw, stats=so, fmt=fmt), (qa, qb)
+
+    @jax.custom_vjp
+    def qdot(a, b):
+        return _fwd(a, b)[0]
+
+    def _bwd(res, g):
+        qa, qb = res
+        be = nbackend.get_backend(backend)
+        qg = be.quantize(g, fmt=fmt)
+        dA = be.qmatmul(qg, qb, layout="nt")
+        dA = be.truncate(dA, stats=be.compute_stats(dA, fmt=fmt), fmt=fmt)
+        dB = be.qmatmul(qa, qg, layout="tn")
+        dB = be.truncate(dB, stats=be.compute_stats(dB, fmt=fmt), fmt=fmt)
+        return dA, dB
+
+    qdot.defvjp(_fwd, _bwd)
+    qdot.fwd_impl = _fwd
+    return qdot
+
+
+def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
+               backend: Optional[str] = None, fmt: str = "e5m2"
+               ) -> jnp.ndarray:
+    """Differentiable payload-domain GEMM: ``[..., K] x [K, N] -> [..., N]``.
+
+    Inside a StatsBank session this is one GEMM bank node (six
+    per-direction states, zero steady-state reductions); outside, exact
+    per-call stats.  Returns f32 (the caller casts, matching
+    ``Policy.dot``).
+    """
+    if b.ndim != 2 or a.ndim < 1 or a.shape[-1] != b.shape[0]:
+        raise ValueError(f"qdot_train wants [..., K] x [K, N]; got "
+                         f"{a.shape} x {b.shape}")
+    out_shape = a.shape[:-1] + (b.shape[-1],)
+    # f32 at the custom_vjp boundary: quantization is f32-in anyway, and
+    # the casts' own VJPs return bf16 cotangents to bf16 callers
+    a2 = a.reshape(-1, a.shape[-1]).astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    sess = statsbank.current_session()
+    if sess is None:
+        y2 = _qdot_exact(backend, fmt)(a2, b)
+    elif sess.discovery:
+        sess.qdot_site()
+        y2 = jnp.dot(a2.astype(jnp.float32), b.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    else:
+        entry = sess.qdot_site()
+        y2 = _qdot_banked(backend, fmt, sess.cfg)(
+            a2, b, entry, sess.pred_f, sess.step_f)
+    return y2.reshape(out_shape)

@@ -66,11 +66,18 @@ FMT_MAX_FINITE = {"e5m2": fp8.E5M2_MAX, "e4m3": fp8.E4M3_MAX}
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class S2FP8Tensor:
-    """Storage representation: e5m2 payload + (alpha, beta) statistics."""
+    """Storage representation: FP8 payload + (alpha, beta) statistics.
 
-    payload: jnp.ndarray        # float8_e5m2, same shape as the source
+    ``fmt`` tags which 8-bit payload format the bytes are in ("e5m2" — the
+    paper's — or "e4m3", the extra-mantissa-bit ablation).  It is pytree
+    aux data (static), so format mismatches surface as trace-time shape
+    errors rather than silently dequantizing with the wrong exponent map.
+    """
+
+    payload: jnp.ndarray        # float8 (per ``fmt``), same shape as source
     alpha: jnp.ndarray          # f32 scalar (squeeze)
     beta: jnp.ndarray           # f32 scalar (shift)
+    fmt: str = "e5m2"           # payload format tag (static)
 
     @property
     def shape(self):
@@ -82,12 +89,19 @@ class S2FP8Tensor:
         8 bytes total for the two stats, counted once per tensor."""
         return int(np.prod(self.payload.shape, dtype=np.int64)) + 8
 
+    def reshape(self, *shape) -> "S2FP8Tensor":
+        """Payload reshape (1-byte move); stats are global, so they carry."""
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return S2FP8Tensor(payload=self.payload.reshape(shape),
+                           alpha=self.alpha, beta=self.beta, fmt=self.fmt)
+
     def tree_flatten(self):
-        return (self.payload, self.alpha, self.beta), None
+        return (self.payload, self.alpha, self.beta), self.fmt
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, fmt=aux)
 
 
 def stats_from_reduction(log_sum, log_max, count,
@@ -171,15 +185,27 @@ def _inverse_map(y: jnp.ndarray, alpha, beta) -> jnp.ndarray:
     return jnp.where(nonzero, x, 0.0)
 
 
-def quantize(x: jnp.ndarray, stats: Optional[Tuple] = None) -> S2FP8Tensor:
+def quantize(x: jnp.ndarray, stats: Optional[Tuple] = None,
+             fmt: str = "e5m2") -> S2FP8Tensor:
     """FP32/bf16 tensor -> S2FP8 storage (payload + stats).
 
     ``stats=(alpha, beta)`` quantizes with the given scalars instead of
-    reducing over ``x`` — the delayed-stats / StatsBank path."""
-    alpha, beta = compute_stats(x) if stats is None else stats
+    reducing over ``x`` — the delayed-stats / StatsBank path.  ``fmt``
+    selects the payload format; the forward image is pinned at the
+    format's target max (Eq. 2) and clamped at its max finite, so stale
+    stats saturate instead of overflowing.
+
+    The elementwise identity ``dequantize(quantize(x, stats=s)) ==
+    truncate_value(x, stats=s)`` is what makes payload-domain GEMMs
+    (core/qdot.py) replay the paper's Fig. 4 chain exactly."""
+    if stats is None:
+        stats = compute_stats(x, target_max=FMT_TARGET_MAX[fmt])
+    alpha, beta = stats
     y = _forward_map(x.astype(jnp.float32), alpha, beta)
-    y = jnp.clip(y, -fp8.E5M2_MAX, fp8.E5M2_MAX)
-    return S2FP8Tensor(payload=fp8.cast_e5m2(y), alpha=alpha, beta=beta)
+    fmax = FMT_MAX_FINITE[fmt]
+    y = jnp.clip(y, -fmax, fmax)
+    return S2FP8Tensor(payload=y.astype(FMT_QDTYPE[fmt]), alpha=alpha,
+                       beta=beta, fmt=fmt)
 
 
 def dequantize(t: S2FP8Tensor, dtype=jnp.float32) -> jnp.ndarray:

@@ -19,6 +19,11 @@ checkpointable)::
          "fwd": {alpha, beta, ema_mu, ema_m, last},   # forward value stats
          "bwd": {alpha, beta, ema_mu, ema_m, last},   # cotangent stats
       },
+      "seg0:dense/mlp/qt0": {            # one entry per payload-GEMM node
+         "a.fwd": {...}, "a.bwd": {...},              # (core/qdot.py):
+         "b.fwd": {...}, "b.bwd": {...},              # operand, output and
+         "out.fwd": {...}, "out.bwd": {...},          # cotangent stats
+      },
       ...
     }
 
@@ -72,6 +77,13 @@ from repro.core import backend as nbackend
 from repro.core import s2fp8
 
 STATE_FIELDS = ("alpha", "beta", "ema_mu", "ema_m", "last")
+
+# Directions of a payload-domain GEMM node (core/qdot.py ``qdot_train``):
+# operand sites ("a", "b"), the output site ("out"), each with forward-value
+# and cotangent stats — the same six Fig. 4 sites the composed
+# ``Policy.dot`` chain visits, keyed flat so bank plumbing (stacking,
+# checkpointing, bookkeeping) is structure-agnostic.
+GEMM_DIRS = ("a.fwd", "a.bwd", "b.fwd", "b.bwd", "out.fwd", "out.bwd")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,8 +158,8 @@ def refresh_state(x: jnp.ndarray, state: Dict[str, jnp.ndarray],
             "last": new_last}
 
 
-def _maybe_refresh(x, state, pred_f, step_f, cfg: StatsConfig,
-                   target_max: float, backend: Optional[str]):
+def maybe_refresh(x, state, pred_f, step_f, cfg: StatsConfig,
+                  target_max: float, backend: Optional[str]):
     """(alpha_used, beta_used, new_state) with the reduction under
     ``lax.cond`` — non-refresh steps run zero reductions.  Refresh steps
     truncate with the freshly derived stats (refresh-then-use), matching
@@ -285,18 +297,18 @@ class Session:
 
         @jax.custom_vjp
         def t(x, fs, bs, pred_f, step_f):
-            a, b, _ = _maybe_refresh(x, fs, pred_f, step_f, cfg,
+            a, b, _ = maybe_refresh(x, fs, pred_f, step_f, cfg,
                                      target_max, backend)
             return routed(x, a, b)
 
         def t_fwd(x, fs, bs, pred_f, step_f):
-            a, b, new_fs = _maybe_refresh(x, fs, pred_f, step_f, cfg,
+            a, b, new_fs = maybe_refresh(x, fs, pred_f, step_f, cfg,
                                           target_max, backend)
             return routed(x, a, b), (new_fs, bs, pred_f, step_f)
 
         def t_bwd(res, g):
             new_fs, bs, pred_f, step_f = res
-            a, b, new_bs = _maybe_refresh(g, bs, pred_f, step_f, cfg,
+            a, b, new_bs = maybe_refresh(g, bs, pred_f, step_f, cfg,
                                           target_max, backend)
             # cotangents of (fs, bs) are the REFRESHED entries — this is
             # how the new bank leaves the trace (grad w.r.t. the bank).
@@ -305,6 +317,21 @@ class Session:
 
         t.defvjp(t_fwd, t_bwd)
         return t(x, entry["fwd"], entry["bwd"], self.pred_f, self.step_f)
+
+    def qdot_site(self) -> Optional[Dict[str, Any]]:
+        """Bank entry for a payload-domain GEMM node (core/qdot.py
+        ``qdot_train``): six per-direction states keyed by
+        :data:`GEMM_DIRS` — operand, output, and cotangent stats of one
+        GEMM.  All six are differentiated through the node's custom_vjp,
+        whose entry-cotangents are the refreshed states (the same
+        bank-update idiom as :meth:`truncate`).  Returns None in
+        discovery mode (after recording the site)."""
+        key = self._site_key("qt")
+        if self.discovery:
+            self.recorded[key] = {"segment": self._segment[0] if self._segment
+                                  else None, "dirs": GEMM_DIRS}
+            return None
+        return self._lookup(key)
 
     def operand_stats(self, x: jnp.ndarray, *, fmt: str = "e5m2"
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -316,15 +343,26 @@ class Session:
         train) step these entries would otherwise receive the mathematical
         dLoss/dalpha cotangent instead of a refreshed entry.  With the
         stop, their cotangent is zero and :func:`merge_updates` carries
-        the old entry forward."""
+        the old entry forward.
+
+        (alpha, beta) are re-derived from the site's carried raw
+        (ema_mu, ema_m) moments with THIS caller's ``fmt`` target — the
+        moments are format-agnostic, so a bank warmed under one format
+        serves the other correctly (for the warming format the derivation
+        reproduces the stored scalars exactly).  Never-refreshed sites
+        fall through to identity stats."""
         key = self._site_key("q")
         if self.discovery:
             self.recorded[key] = {"segment": self._segment[0] if self._segment
                                   else None, "dirs": ("fwd",)}
             return jnp.float32(1.0), jnp.float32(0.0)
         st = self._lookup(key)["fwd"]
-        return (jax.lax.stop_gradient(st["alpha"]),
-                jax.lax.stop_gradient(st["beta"]))
+        alpha, beta = s2fp8.stats_from_reduction(
+            st["ema_mu"], st["ema_m"],
+            (st["last"] >= 0).astype(jnp.float32),
+            s2fp8.FMT_TARGET_MAX[fmt])
+        return (jax.lax.stop_gradient(alpha),
+                jax.lax.stop_gradient(beta))
 
 
 # ---------------------------------------------------------------------------
@@ -419,11 +457,22 @@ def merge_updates(bank: Dict[str, Any], updates: Dict[str, Any]
                   ) -> Dict[str, Any]:
     """Assemble the next-step bank from the loss gradient w.r.t. the bank.
 
-    Truncation sites (entries with a "bwd" direction) emit their refreshed
-    entry as their cotangent — take ``updates``.  Read-only operand-stats
-    sites ("fwd"-only entries, gradient-stopped reads) have zero
-    cotangents — carry the old entry forward unchanged."""
-    return {k: updates[k] if "bwd" in bank[k] else bank[k] for k in bank}
+    Sites with any cotangent-carrying direction — truncation sites
+    ("bwd") and payload-GEMM nodes (every :data:`GEMM_DIRS` state) — emit
+    their refreshed entry as their cotangent: take ``updates``.  Read-only
+    operand-stats sites ("fwd"-only entries, gradient-stopped reads) have
+    zero cotangents — carry the old entry forward unchanged."""
+    return {k: updates[k] if any("bwd" in d for d in bank[k]) else bank[k]
+            for k in bank}
+
+
+def bookkeeping_last(bank: Dict[str, Any]) -> jnp.ndarray:
+    """Every site-direction's last-refresh scalar, concatenated — the
+    trainer's O(n_sites) cold-start probe (``min < 0`` => some site still
+    bootstraps this step).  Structure-agnostic over plain truncation
+    entries, read-only operand sites, and GEMM nodes."""
+    return jnp.concatenate([jnp.ravel(st["last"])
+                            for e in bank.values() for st in e.values()])
 
 
 # ---------------------------------------------------------------------------
@@ -521,7 +570,7 @@ class HostStatsBank:
         """Bank-stats quantization to S2FP8 storage (compression callers)."""
         st = self._site(x, key, step)
         be = nbackend.get_backend(self.backend)
-        return be.quantize(x, stats=(st["alpha"], st["beta"]))
+        return be.quantize(x, stats=(st["alpha"], st["beta"]), fmt=self.fmt)
 
     def clear(self):
         self.bank.clear()

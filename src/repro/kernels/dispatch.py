@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.core import s2fp8
 from repro.kernels import auto_interpret
-from repro.kernels.s2fp8_matmul import s2fp8_matmul_pallas
+from repro.kernels.ref import gemm_dims
+from repro.kernels.s2fp8_matmul import pick_gemm_block, s2fp8_matmul_pallas
 from repro.kernels.s2fp8_quant import (DEFAULT_BLOCK, dequant_pallas,
                                        quant_apply_pallas, quant_pallas,
                                        stats_pallas, truncate_apply_pallas,
@@ -115,20 +116,21 @@ def stats_nd(x: jnp.ndarray, *, target_max: float = s2fp8.TARGET_MAX_LOG2,
     return s2fp8.stats_from_reduction(s, mx, c, target_max)
 
 
-def quant_nd(x: jnp.ndarray, *, stats=None, block=DEFAULT_BLOCK,
-             interpret: Optional[bool] = None):
-    """(payload_e5m2, alpha, beta) with payload in x's shape, any rank.
+def quant_nd(x: jnp.ndarray, *, stats=None, fmt: str = "e5m2",
+             block=DEFAULT_BLOCK, interpret: Optional[bool] = None):
+    """(payload, alpha, beta) with payload in x's shape, any rank.
 
     ``stats=(alpha, beta)`` skips the in-kernel reduction and quantizes
-    with the given scalars (exact-stats / delayed-stats paths).
+    with the given scalars (exact-stats / delayed-stats paths); ``fmt``
+    selects the payload format (e5m2 / e4m3).
     """
     x2 = as_blocked_2d(x.astype(jnp.float32), block)
     if stats is None:
-        payload2, alpha, beta = quant_pallas(x2, block=block,
+        payload2, alpha, beta = quant_pallas(x2, fmt=fmt, block=block,
                                              interpret=interpret)
     else:
         alpha, beta = stats
-        payload2 = quant_apply_pallas(x2, alpha, beta, block=block,
+        payload2 = quant_apply_pallas(x2, alpha, beta, fmt=fmt, block=block,
                                       interpret=interpret)
     return from_blocked_2d(payload2, x.shape), alpha, beta
 
@@ -181,28 +183,47 @@ def truncate_nd(x: jnp.ndarray, *, stats=None, fmt: str = "e5m2",
 # ---------------------------------------------------------------------------
 
 def qmatmul_nd(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta, *,
-               bm: int = 256, bk: int = 256, bn: int = 256,
+               layout: str = "nn", epilogue_stats=None, fmt: str = "e5m2",
+               bm: Optional[int] = None, bk: Optional[int] = None,
+               bn: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
-    """C[M,N] = dequant(A[M,K]) @ dequant(B[K,N]) for arbitrary M/K/N.
+    """C[M,N] = dequant(A) @ dequant(B) under ``layout``, arbitrary M/K/N.
 
     Ragged dims are zero-padded to the block grid (payload zeros dequantize
-    to 0.0, contributing nothing to the accumulation) and the result is
-    sliced back.
+    to 0.0, contributing nothing to the accumulation; the Eq. 5 epilogue
+    maps zero to zero) and the result is sliced back.  Block sizes default
+    to the (M, K, N, platform) heuristic table in
+    ``s2fp8_matmul.pick_gemm_block`` (``REPRO_GEMM_BLOCK`` overrides).
+    ``epilogue_stats=(alpha, beta)`` fuses the output-site truncation into
+    the kernel's last K step.
     """
-    m, k = a_payload.shape
-    k2, n = b_payload.shape
-    assert k == k2, (a_payload.shape, b_payload.shape)
-    # tile alignment first (M: sublane; K: lane of A and sublane of B,
-    # so 128 covers both; N: lane), then block divisibility
-    ma, ka, na = (_ceil_to(m, SUBLANE_ALIGN), _ceil_to(k, LANE_ALIGN),
-                  _ceil_to(n, LANE_ALIGN))
-    bm_, bk_, bn_ = min(bm, ma), min(bk, ka), min(bn, na)
+    m, k, n = gemm_dims(layout, a_payload.shape, b_payload.shape)
+    # Per-layout tile alignment: a GEMM dim needs the 128-lane multiple
+    # only where it is the LANE (last) dim of a stored operand or of the
+    # output; row dims need sublane (8).  M: sublane everywhere except
+    # "tn" (lane of the stored [K, M] operand).  K: lane of A ("nn") or
+    # of both operands ("nt"), rows-only under "tn".  N: always the
+    # output's lane.  This keeps small-M inference GEMMs at 8-row padding
+    # instead of inflating them 16x.
+    ma = _ceil_to(m, LANE_ALIGN if layout == "tn" else SUBLANE_ALIGN)
+    ka = _ceil_to(k, SUBLANE_ALIGN if layout == "tn" else LANE_ALIGN)
+    na = _ceil_to(n, LANE_ALIGN)
+    hm, hk, hn = pick_gemm_block(ma, ka, na)
+    bm_ = min(hm if bm is None else bm, ma)
+    bk_ = min(hk if bk is None else bk, ka)
+    bn_ = min(hn if bn is None else bn, na)
     mp, kp, np_ = _ceil_to(ma, bm_), _ceil_to(ka, bk_), _ceil_to(na, bn_)
-    a_pad = _pad_axis(_pad_axis(a_payload, 0, mp), 1, kp)
-    b_pad = _pad_axis(_pad_axis(b_payload, 0, kp), 1, np_)
+    pads = {"nn": ((mp, kp), (kp, np_)),
+            "nt": ((mp, kp), (np_, kp)),
+            "tn": ((kp, mp), (kp, np_))}[layout]
+    (ar, ac), (br, bc) = pads
+    a_pad = _pad_axis(_pad_axis(a_payload, 0, ar), 1, ac)
+    b_pad = _pad_axis(_pad_axis(b_payload, 0, br), 1, bc)
+    oa, ob = (None, None) if epilogue_stats is None else epilogue_stats
     out = s2fp8_matmul_pallas(a_pad, jnp.asarray(a_alpha, jnp.float32),
                               jnp.asarray(a_beta, jnp.float32),
                               b_pad, jnp.asarray(b_alpha, jnp.float32),
                               jnp.asarray(b_beta, jnp.float32),
+                              oa, ob, layout=layout, fmt=fmt,
                               bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
     return out[:m, :n]

@@ -36,10 +36,54 @@ def s2fp8_truncate_ref(x, stats=None, fmt: str = "e5m2"):
 # s2fp8_matmul: C = dequant(A) @ dequant(B), f32 accumulation
 # --------------------------------------------------------------------------
 
-def s2fp8_matmul_ref(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta):
+# GEMM operand layouts.  The payload-domain training path (core/qdot.py)
+# computes the backward GEMMs dA = g·Bᵀ and dB = Aᵀ·g directly from the
+# payloads the forward saved — the layout selects which operand is consumed
+# transposed via dot_general dimension numbers (the Pallas kernel swaps
+# BlockSpec index maps to match), so no payload transpose is ever
+# materialized in HBM.
+#
+#   "nn": C[M,N] = A[M,K]  @ B[K,N]
+#   "nt": C[M,N] = A[M,K]  @ B[N,K]ᵀ      (B stored row-major [N,K])
+#   "tn": C[M,N] = A[K,M]ᵀ @ B[K,N]       (A stored row-major [K,M])
+GEMM_LAYOUTS = ("nn", "nt", "tn")
+GEMM_CONTRACT = {
+    "nn": (((1,), (0,)), ((), ())),
+    "nt": (((1,), (1,)), ((), ())),
+    "tn": (((0,), (0,)), ((), ())),
+}
+
+
+def gemm_dims(layout: str, a_shape, b_shape):
+    """(m, k, n) of the logical GEMM for stored operand shapes."""
+    if layout == "nn":
+        (m, k), (k2, n) = a_shape, b_shape
+    elif layout == "nt":
+        (m, k), (n, k2) = a_shape, b_shape
+    elif layout == "tn":
+        (k, m), (k2, n) = a_shape, b_shape
+    else:
+        raise ValueError(f"unknown GEMM layout {layout!r}; want {GEMM_LAYOUTS}")
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a_shape} x {b_shape} "
+                         f"under layout {layout!r}")
+    return m, k, n
+
+
+def s2fp8_matmul_ref(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
+                     out_alpha=None, out_beta=None, *, layout: str = "nn",
+                     fmt: str = "e5m2"):
+    """Dequant-GEMM oracle with optional fused-epilogue semantics.
+
+    ``out_alpha/out_beta`` — when given, the output is Eq. 5-truncated with
+    those stats (the kernel's in-VMEM epilogue, expressed elementwise)."""
     a = s2fp8_dequant_ref(a_payload, a_alpha, a_beta)
     b = s2fp8_dequant_ref(b_payload, b_alpha, b_beta)
-    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(a, b, GEMM_CONTRACT[layout],
+                            preferred_element_type=jnp.float32)
+    if out_alpha is not None:
+        y = s2fp8_truncate_ref(y, stats=(out_alpha, out_beta), fmt=fmt)
+    return y
 
 
 # --------------------------------------------------------------------------

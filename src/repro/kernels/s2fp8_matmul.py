@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: S2FP8 GEMM with in-tile dequantization, f32 accumulation.
+"""Pallas TPU kernel: S2FP8 GEMM with in-tile dequantization, f32 accumulation,
+transposed operand layouts, and a fused output-truncation epilogue.
 
 This is the paper's "tensor processing engine which requires the alpha and
 beta factors while doing the calculations" (§5), adapted to the TPU memory
@@ -7,21 +8,37 @@ bandwidth win), the inverse shift/squeeze map runs on the VPU per tile, and
 the dequantized f32 tiles feed the MXU with f32 accumulation (the paper's
 FP32-accumulate requirement, native on TPU).
 
+Three additions make the kernel the *training* GEMM (core/qdot.py):
+
+  * ``layout`` in {"nn", "nt", "tn"} — the backward GEMMs dA = g·Bᵀ and
+    dB = Aᵀ·g consume the forward's saved payloads transposed.  A layout is
+    purely a BlockSpec index-map swap plus matching dot_general dimension
+    numbers inside the tile; no payload transpose ever touches HBM.
+  * ``out_alpha/out_beta`` — a fused Eq. 5 epilogue: on the last K step the
+    accumulated f32 output tile is truncated in VMEM with the output site's
+    (alpha, beta) (forward map -> clamp at format max -> FP8 RNE -> inverse
+    map, shared ``_truncate_body``), so Fig. 4's separate output-truncation
+    pass disappears.  The clamp turns stale-bank-stats overflow into
+    saturation, never inf.
+  * a (M, K, N, platform)-keyed block heuristic (``pick_gemm_block``) with a
+    ``REPRO_GEMM_BLOCK=bm,bk,bn`` env override, replacing the fixed
+    (256, 256, 256) tiles — see kernels/README.md for the sweep.
+
 Grid is (M/bm, N/bn, K/bk) with K innermost; the output tile lives in VMEM
 across the K loop (constant index_map) and acts as the accumulator.
-Default tiles (bm, bk, bn) = (256, 256, 256): VMEM use =
-2 * 256*256 B (fp8 operands) + 2 * 256*256*4 B (dequantized) + 256*256*4 B
-(acc) ~= 0.9 MiB, MXU dims all multiples of 128.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import auto_interpret
+from repro.kernels.ref import GEMM_CONTRACT, GEMM_LAYOUTS, gemm_dims
+from repro.kernels.s2fp8_quant import _truncate_body
 
 
 def _dequant(y, alpha, beta):
@@ -32,7 +49,8 @@ def _dequant(y, alpha, beta):
     return jnp.where(nz, jnp.sign(y) * jnp.exp2(xlog), 0.0)
 
 
-def _matmul_kernel(aa_ref, ab_ref, ba_ref, bb_ref, a_ref, b_ref, o_ref):
+def _matmul_kernel(aa_ref, ab_ref, ba_ref, bb_ref, oa_ref, ob_ref,
+                   a_ref, b_ref, o_ref, *, layout, epilogue, fmt):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -41,37 +59,116 @@ def _matmul_kernel(aa_ref, ab_ref, ba_ref, bb_ref, a_ref, b_ref, o_ref):
 
     a = _dequant(a_ref[...], aa_ref[0, 0], ab_ref[0, 0])
     b = _dequant(b_ref[...], ba_ref[0, 0], bb_ref[0, 0])
-    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    o_ref[...] += jax.lax.dot_general(a, b, GEMM_CONTRACT[layout],
+                                      preferred_element_type=jnp.float32)
+    if epilogue:
+        @pl.when(k == pl.num_programs(2) - 1)
+        def _epilogue():
+            # Eq. 5 on the finished accumulator tile, in VMEM: the output
+            # never crosses HBM untruncated.
+            o_ref[...] = _truncate_body(o_ref[...], oa_ref[0, 0],
+                                        ob_ref[0, 0], fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def _operand_specs(layout, bm, bk, bn):
+    """BlockSpecs realizing the layout as pure index-map swaps."""
+    if layout == "nn":
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    elif layout == "nt":
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+    else:  # tn
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    return a_spec, b_spec
+
+
+# ---------------------------------------------------------------------------
+# block-size heuristic
+# ---------------------------------------------------------------------------
+
+# (platform, size-class) -> (bm, bk, bn).  Chosen by the sweep recorded in
+# kernels/README.md ("GEMM block heuristic"); VMEM budget per entry =
+# fp8 operand tiles (bm*bk + bk*bn bytes) + their f32 dequant images (x4)
+# + the f32 accumulator (bm*bn*4), double-buffered on the operand side.
+#   tpu/small : K often fits one step; modest tiles keep the grid >= core
+#               count for pipelining.
+#   tpu/large : widen K to 512 (1-byte payload tiles make deep-K cheap:
+#               512*256 fp8 = 128 KiB/operand tile) to cut accumulator
+#               revisits; ~3.5 MiB resident, safe with double buffering.
+#   interpret : grid iterations are Python-speed, so prefer the fewest,
+#               fattest tiles that divide the padded problem.
+_BLOCK_TABLE = {
+    ("tpu", "s"): (128, 256, 128),
+    ("tpu", "m"): (256, 256, 256),
+    ("tpu", "l"): (256, 512, 256),
+    ("interpret", "s"): (256, 256, 256),
+    ("interpret", "m"): (256, 512, 256),
+    ("interpret", "l"): (512, 512, 512),
+}
+
+
+def pick_gemm_block(m: int, k: int, n: int, platform: str | None = None):
+    """(bm, bk, bn) for a logical (M, K, N) GEMM on ``platform``.
+
+    ``REPRO_GEMM_BLOCK=bm,bk,bn`` overrides the table globally (perf
+    triage / sweeps without a code edit)."""
+    env = os.environ.get("REPRO_GEMM_BLOCK")
+    if env:
+        try:
+            bm, bk, bn = (int(v) for v in env.split(","))
+        except ValueError:
+            raise ValueError(
+                f"REPRO_GEMM_BLOCK must be 'bm,bk,bn' ints, got {env!r}")
+        return bm, bk, bn
+    if platform is None:
+        platform = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    size = max(m, k, n)
+    cls = "s" if size <= 512 else ("m" if size <= 2048 else "l")
+    return _BLOCK_TABLE[(platform, cls)]
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("layout", "fmt", "bm", "bk",
+                                             "bn", "interpret"))
 def s2fp8_matmul_pallas(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
-                        *, bm=256, bk=256, bn=256, interpret: bool | None = None):
-    """C[M,N] = dequant(A[M,K]) @ dequant(B[K,N]); payloads are e5m2.
+                        out_alpha=None, out_beta=None, *, layout: str = "nn",
+                        fmt: str = "e5m2", bm=256, bk=256, bn=256,
+                        interpret: bool | None = None):
+    """C[M,N] = dequant(A) x dequant(B) under ``layout``; payloads are FP8.
 
-    ``interpret=None`` auto-detects (compiled on TPU, interpreter off-TPU).
-    Shapes must be block-divisible; ragged shapes are zero-padded one layer
-    up in ``repro.kernels.dispatch.qmatmul_nd``.
+    ``out_alpha/out_beta`` enable the fused Eq. 5 output-truncation
+    epilogue (stats of the OUTPUT site; ``fmt`` is the epilogue's payload
+    format).  ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    off-TPU).  Shapes must be block-divisible; ragged shapes are
+    zero-padded one layer up in ``repro.kernels.dispatch.qmatmul_nd``.
     """
     interpret = auto_interpret() if interpret is None else interpret
-    m, k = a_payload.shape
-    k2, n = b_payload.shape
-    assert k == k2, (a_payload.shape, b_payload.shape)
+    m, k, n = gemm_dims(layout, a_payload.shape, b_payload.shape)
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
     grid = (m // bm, n // bn, k // bk)
+    epilogue = out_alpha is not None
+    oa = out_alpha if epilogue else 1.0
+    ob = out_beta if epilogue else 0.0
     scalar = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    a_spec, b_spec = _operand_specs(layout, bm, bk, bn)
     return pl.pallas_call(
-        _matmul_kernel,
+        functools.partial(_matmul_kernel, layout=layout, epilogue=epilogue,
+                          fmt=fmt),
         grid=grid,
-        in_specs=[
-            scalar, scalar, scalar, scalar,
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=[scalar] * 6 + [a_spec, b_spec],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(a_alpha.reshape(1, 1), a_beta.reshape(1, 1),
-      b_alpha.reshape(1, 1), b_beta.reshape(1, 1),
+    )(jnp.asarray(a_alpha, jnp.float32).reshape(1, 1),
+      jnp.asarray(a_beta, jnp.float32).reshape(1, 1),
+      jnp.asarray(b_alpha, jnp.float32).reshape(1, 1),
+      jnp.asarray(b_beta, jnp.float32).reshape(1, 1),
+      jnp.asarray(oa, jnp.float32).reshape(1, 1),
+      jnp.asarray(ob, jnp.float32).reshape(1, 1),
       a_payload, b_payload)

@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.s2fp8 import (FMT_MAX_FINITE, FMT_QDTYPE, TARGET_MAX_LOG2,
-                              stats_from_reduction)
+from repro.core.s2fp8 import (FMT_MAX_FINITE, FMT_QDTYPE, FMT_TARGET_MAX,
+                              TARGET_MAX_LOG2, stats_from_reduction)
 from repro.kernels import auto_interpret
 
 DEFAULT_BLOCK = (256, 512)
@@ -66,7 +66,7 @@ def _stats_kernel(x_ref, sum_ref, max_ref, cnt_ref):
     cnt_ref[0, 0] += jnp.sum(nz.astype(jnp.float32))
 
 
-def _apply_kernel(alpha_ref, beta_ref, x_ref, out_ref):
+def _apply_kernel(alpha_ref, beta_ref, x_ref, out_ref, *, fmt):
     alpha = alpha_ref[0, 0]
     beta = beta_ref[0, 0]
     x = x_ref[...].astype(jnp.float32)
@@ -74,10 +74,10 @@ def _apply_kernel(alpha_ref, beta_ref, x_ref, out_ref):
     nz = absx > 0.0
     ylog = alpha * jnp.log2(jnp.where(nz, absx, 1.0)) + beta
     y = jnp.where(nz, jnp.sign(x) * jnp.exp2(ylog), 0.0)
-    # clamp at e5m2 max finite, mirroring core/s2fp8.py quantize: a no-op
-    # for fresh stats, saturation (not inf) under stale delayed/bank stats
-    y = jnp.clip(y, -FMT_MAX_FINITE["e5m2"], FMT_MAX_FINITE["e5m2"])
-    out_ref[...] = y.astype(jnp.float8_e5m2)
+    # clamp at the format's max finite, mirroring core/s2fp8.py quantize:
+    # a no-op for fresh stats, saturation (not inf) under stale bank stats
+    y = jnp.clip(y, -FMT_MAX_FINITE[fmt], FMT_MAX_FINITE[fmt])
+    out_ref[...] = y.astype(FMT_QDTYPE[fmt])
 
 
 def _dequant_kernel(alpha_ref, beta_ref, y_ref, out_ref):
@@ -172,34 +172,35 @@ def stats_pallas(x: jnp.ndarray, *, block=DEFAULT_BLOCK, interpret: bool | None 
     return s[0, 0], mx[0, 0], c[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def quant_apply_pallas(x: jnp.ndarray, alpha, beta, *, block=DEFAULT_BLOCK,
-                       interpret: bool | None = None):
-    """Forward map + e5m2 cast with externally supplied (alpha, beta)."""
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def quant_apply_pallas(x: jnp.ndarray, alpha, beta, *, fmt: str = "e5m2",
+                       block=DEFAULT_BLOCK, interpret: bool | None = None):
+    """Forward map + FP8 cast with externally supplied (alpha, beta)."""
     interpret = _resolve(interpret)
     m, n = x.shape
     bm, bn = min(block[0], m), min(block[1], n)
     grid = (m // bm, n // bn)
     scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     return pl.pallas_call(
-        _apply_kernel,
+        functools.partial(_apply_kernel, fmt=fmt),
         grid=grid,
         in_specs=[scalar_spec, scalar_spec,
                   pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float8_e5m2),
+        out_shape=jax.ShapeDtypeStruct((m, n), FMT_QDTYPE[fmt]),
         interpret=interpret,
     )(jnp.asarray(alpha, jnp.float32).reshape(1, 1),
       jnp.asarray(beta, jnp.float32).reshape(1, 1), x)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def quant_pallas(x: jnp.ndarray, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
-    """Full S2FP8 quantization: returns (payload_e5m2, alpha, beta)."""
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def quant_pallas(x: jnp.ndarray, *, fmt: str = "e5m2", block=DEFAULT_BLOCK,
+                 interpret: bool | None = None):
+    """Full S2FP8 quantization: returns (payload, alpha, beta)."""
     interpret = _resolve(interpret)
     s, mx, c = stats_pallas(x, block=block, interpret=interpret)
-    alpha, beta = stats_from_reduction(s, mx, c)
-    payload = quant_apply_pallas(x, alpha, beta, block=block,
+    alpha, beta = stats_from_reduction(s, mx, c, FMT_TARGET_MAX[fmt])
+    payload = quant_apply_pallas(x, alpha, beta, fmt=fmt, block=block,
                                  interpret=interpret)
     return payload, alpha, beta
 

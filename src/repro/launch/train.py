@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config, get_reduced_config
 from repro.core import backend as nbackend
+from repro.core import policy as policy_mod
 from repro.core import statsbank
 from repro.core.policy import make_policy
 from repro.checkpoint.manager import CheckpointManager
@@ -42,6 +43,13 @@ def main():
                     choices=("auto",) + nbackend.available_backends(),
                     help="numerics backend for s2fp8 truncations "
                          "(default: the arch config's, usually 'auto')")
+    ap.add_argument("--gemm-mode", default="auto",
+                    choices=policy_mod.GEMM_MODES,
+                    help="s2fp8 GEMM execution: 'payload' = qdot_train "
+                         "(FP8 operand streaming, fused epilogue, NT/TN "
+                         "payload backward), 'fig4' = the composed "
+                         "truncation chain; 'auto' = payload on the "
+                         "pallas engines")
     ap.add_argument("--loss-scale", type=float, default=100.0)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -65,9 +73,10 @@ def main():
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     backend_name = args.backend or getattr(cfg, "numerics_backend", "auto")
     pol = make_policy(args.policy, loss_scale=args.loss_scale,
-                      backend=backend_name)
+                      backend=backend_name, gemm_mode=args.gemm_mode)
     print(f"[train] numerics backend: {backend_name} "
-          f"-> {pol.backend_obj.name} ({jax.default_backend()})")
+          f"-> {pol.backend_obj.name} ({jax.default_backend()}), "
+          f"gemm: {'payload' if pol.uses_payload_gemm else 'fig4'}")
     key = jax.random.PRNGKey(args.seed)
 
     if args.mesh == "host":

@@ -104,10 +104,10 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
         # sites also refresh on bootstrap (last < 0), not just on cadence;
         # one O(n_sites) min over the concatenated bookkeeping scalars —
         # the single non-cond reduction the bank step adds (asserted in
-        # tests/test_statsbank.py::test_zero_stats_reductions_outside_cond)
-        cold = jnp.concatenate(
-            [jnp.ravel(d["last"]) for e in stats_state.values()
-             for d in e.values()])
+        # tests/test_statsbank.py::test_zero_stats_reductions_outside_cond).
+        # bookkeeping_last is structure-agnostic: plain truncation sites
+        # and payload-GEMM nodes (qdot_train) alike.
+        cold = statsbank.bookkeeping_last(stats_state)
         metrics["stats_refreshed"] = jnp.maximum(
             (step % stats.refresh_every == 0).astype(jnp.float32),
             (jnp.min(cold) < 0).astype(jnp.float32))

@@ -162,11 +162,13 @@ def test_policy_qdot_payload_domain_gemm():
     out = np.asarray(make_policy("s2fp8", backend="pallas").qdot(a, b))
     exact = np.asarray(jnp.dot(a, b))
     assert np.corrcoef(out.ravel(), exact.ravel())[0, 1] > 0.99
-    # non-s2fp8 modes fall back to dot; e4m3 has no storage path yet
+    # non-s2fp8 modes fall back to dot
     f32 = np.asarray(make_policy("fp32").qdot(a, b))
     np.testing.assert_array_equal(f32, np.asarray(jnp.dot(a, b)))
-    with pytest.raises(NotImplementedError):
-        make_policy("s2fp8_e4m3").qdot(a, b)
+    # e4m3 storage parity: same path, e4m3 payloads (tests/test_qdot_train.py
+    # covers the format in depth)
+    out4 = np.asarray(make_policy("s2fp8_e4m3", backend="pallas").qdot(a, b))
+    assert np.corrcoef(out4.ravel(), exact.ravel())[0, 1] > 0.99
 
 
 def test_blocked_2d_roundtrip_exact():
