@@ -167,6 +167,60 @@ def modeled_hbm_bytes(mode: str, m: int, k: int, n: int) -> dict:
             "bytes_per_element": total / (mk + kn + mn)}
 
 
+def modeled_hbm_bytes_batched(mode: str, g: int, gb: int, m: int, k: int,
+                              n: int) -> dict:
+    """Batched extension of :func:`modeled_hbm_bytes`: the A operand and
+    the output carry the full combined batch ``g``; B is stored at its
+    broadcast batch ``gb <= g`` (the ``becd,edf`` weight reuse).  Per-
+    tensor crossings split into quantize/truncate-side passes (scale with
+    the STORED size) and GEMM-read passes (scale with the streamed size:
+    broadcast B payload tiles re-stream once per broadcast group)."""
+    amk, bkn, ymn = g * m * k, gb * k * n, g * m * n
+    b_stream = g * k * n                  # B payload crossings per GEMM read
+    if mode == "fig4":
+        # fig4 streams the truncated f32 B per batch slice too (XLA
+        # broadcasts the 4-byte tensor through the batched dot)
+        fwd = 8 * amk + 8 * bkn + 4 * (amk + b_stream) + 12 * ymn
+        bwd = (8 * ymn + 4 * (ymn + b_stream) + 12 * amk
+               + 4 * (amk + ymn) + 12 * bkn)
+    elif mode == "payload":
+        fwd = 5 * amk + 5 * bkn + 1 * (amk + b_stream) + 4 * ymn
+        bwd = (5 * ymn + (ymn + b_stream) + 4 * amk
+               + (amk + ymn) + 4 * bkn)
+    else:
+        raise ValueError(mode)
+    total = fwd + bwd
+    return {"total_bytes": total,
+            "bytes_per_element": total / (amk + bkn + ymn)}
+
+
+def modeled_hbm_bytes_conv(mode: str, b: int, oh: int, ow: int, kh: int,
+                           kw: int, cin: int, cout: int) -> dict:
+    """Conv lowering traffic model.  The payload path pays the im2col
+    materialization honestly — the patch tensor (a ~kh*kw-fold read
+    amplification of the activation) crosses HBM at 4 B once (write +
+    quantize read) before collapsing to 1-byte payloads — and still wins
+    on the GEMM-side streaming; the fig4 chain runs
+    ``lax.conv_general_dilated`` on truncated f32 tensors (no im2col
+    blowup, but every GEMM-equivalent crossing at 4 B)."""
+    m, k, n = b * oh * ow, kh * kw * cin, cout
+    x_elems = m * cin                      # ~input activation size
+    if mode == "fig4":
+        gemm = modeled_hbm_bytes("fig4", m, k, n)
+        # replace the im2col-sized operand crossings with x-sized ones:
+        # fig4 truncates x (8/elt) and the conv reads it window-wise (~4)
+        total = gemm["total_bytes"] - 28 * m * k + 28 * x_elems
+    elif mode == "payload":
+        gemm = modeled_hbm_bytes("payload", m, k, n)
+        # + patch materialization: 4 B write + 4 B quantize read per patch
+        # element, replacing the 4 B quantize read of a dense operand
+        total = gemm["total_bytes"] - 4 * m * k + 8 * m * k
+    else:
+        raise ValueError(mode)
+    return {"total_bytes": total,
+            "bytes_per_element": total / (x_elems + k * n + m * n)}
+
+
 def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
     """The payload-domain training GEMM lane: full fwd+bwd step over one
     ``Policy.dot``, three ways —
@@ -182,7 +236,6 @@ def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
     Off-TPU the backends route to the jnp engine, so the modeled HBM
     bytes/element column carries the TPU story (1- vs 4-byte streaming).
     """
-    from repro.core import statsbank
     from repro.core.policy import make_policy
 
     key = jax.random.PRNGKey(42)
@@ -196,7 +249,6 @@ def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
         a = jax.random.normal(key, (n, n)) * 1e-4
         b = jax.random.normal(jax.random.fold_in(key, 1), (n, n)) * 1e-4
         params = {"a": a, "b": b}
-        scfg = statsbank.StatsConfig(refresh_every=16)
 
         pol_exact = make_policy("s2fp8", gemm_mode="fig4")
         grad_exact = jax.jit(jax.value_and_grad(
@@ -204,30 +256,11 @@ def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
         exact_us = time_jitted(grad_exact, params, iters=iters)
 
         lane = {"n": n, "fig4_exact_us": exact_us}
-        for gm in ("fig4", "payload"):
-            pol = make_policy("s2fp8", gemm_mode=gm)
-            bank = statsbank.init_bank(loss_fn, params, None, pol, scfg)
-
-            @jax.jit
-            def banked(p, bk, step, pol=pol):
-                def f(p_, bk_):
-                    with statsbank.bind(bk_, step, scfg):
-                        l, _ = loss_fn(p_, None, pol)
-                    return l
-                loss, (g, up) = jax.value_and_grad(f, argnums=(0, 1))(p, bk)
-                return loss, g, statsbank.merge_updates(bk, up)
-
-            _, _, bank = jax.block_until_ready(
-                banked(params, bank, jnp.int32(0)))  # bootstrap refresh
-            step = jnp.int32(1)                       # steady state
-            lane[f"{gm}_bank_us"] = time_jitted(
-                lambda p: banked(p, bank, step)[0], params, iters=iters)
+        lane.update(_banked_lane_times(loss_fn, params, None, iters))
 
         flop = 3 * 2 * n ** 3                         # fwd + dA + dB GEMMs
         lane["payload_gflops"] = flop / (lane["payload_bank_us"] * 1e-6) / 1e9
         lane["payload_vs_fig4_exact"] = exact_us / lane["payload_bank_us"]
-        lane["payload_vs_fig4_bank"] = (lane["fig4_bank_us"]
-                                        / lane["payload_bank_us"])
         lane["modeled_hbm_bytes_per_elt"] = {
             m_: modeled_hbm_bytes(m_, n, n, n)["bytes_per_element"]
             for m_ in ("fig4", "payload")}
@@ -240,29 +273,127 @@ def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
         results["gemm"].append(lane)
 
 
+def _banked_lane_times(loss_fn, params, batch, iters: int) -> dict:
+    """fig4-vs-payload train-step times over one loss, StatsBank steady
+    state — the shared harness of the gemm/moe/conv lanes."""
+    from repro.core import statsbank
+    from repro.core.policy import make_policy
+
+    scfg = statsbank.StatsConfig(refresh_every=16)
+    out = {}
+    for gm in ("fig4", "payload"):
+        pol = make_policy("s2fp8", gemm_mode=gm)
+        bank = statsbank.init_bank(loss_fn, params, batch, pol, scfg)
+
+        @jax.jit
+        def banked(p, bk, step, pol=pol):
+            def f(p_, bk_):
+                with statsbank.bind(bk_, step, scfg):
+                    l, _ = loss_fn(p_, batch, pol)
+                return l
+            loss, (g, up) = jax.value_and_grad(f, argnums=(0, 1))(p, bk)
+            return loss, g, statsbank.merge_updates(bk, up)
+
+        _, _, bank = jax.block_until_ready(
+            banked(params, bank, jnp.int32(0)))   # bootstrap refresh
+        step = jnp.int32(1)                        # steady state
+        out[f"{gm}_bank_us"] = time_jitted(
+            lambda p: banked(p, bank, step)[0], params, iters=iters)
+    out["payload_vs_fig4_bank"] = out["fig4_bank_us"] / out["payload_bank_us"]
+    return out
+
+
+def bench_moe(results, smoke=False):
+    """MoE expert-einsum lane: full fwd+bwd step over the two routed
+    expert contractions (``ecd,edf->ecf`` up, ``ecf,efd->ecd`` down) —
+    the batched payload GEMM nodes of ISSUE 4 — payload vs Fig. 4, bank
+    steady state, plus the modeled batched HBM bytes/elt."""
+    key = jax.random.PRNGKey(7)
+    e, c, d, f = (2, 64, 64, 128) if smoke else (8, 256, 512, 1024)
+    iters = 2 if smoke else 5
+    params = {"we": jax.random.normal(key, (e, d, f)) * 1e-3,
+              "wd": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (e, f, d)) * 1e-3}
+    xe = jax.random.normal(jax.random.fold_in(key, 2), (e, c, d)) * 1e-3
+
+    def loss_fn(p, batch, pol_):
+        h = pol_.einsum("ecd,edf->ecf", batch, p["we"])
+        h = pol_.einsum("ecf,efd->ecd", h, p["wd"])
+        return jnp.sum(h * h), {}
+
+    lane = {"e": e, "c": c, "d": d, "f": f}
+    lane.update(_banked_lane_times(loss_fn, params, xe, iters))
+    lane["modeled_hbm_bytes_per_elt"] = {
+        m_: modeled_hbm_bytes_batched(m_, e, e, c, d, f)["bytes_per_element"]
+        for m_ in ("fig4", "payload")}
+    emit(f"moe_train_fig4_bank_e{e}", lane["fig4_bank_us"],
+         "bank steady state")
+    emit(f"moe_train_payload_bank_e{e}", lane["payload_bank_us"],
+         f"{lane['payload_vs_fig4_bank']:.2f}x vs fig4-bank "
+         f"[{e}x{c}x{d}]x[{e}x{d}x{f}]")
+    results["moe"].append(lane)
+
+
+def bench_conv(results, smoke=False):
+    """Conv lane: full fwd+bwd step over one ``Policy.conv`` — the im2col
+    payload lowering (ISSUE 4, the paper's ResNet leg) vs the Fig. 4
+    ``lax.conv_general_dilated`` chain, bank steady state, plus the
+    modeled bytes/elt with honest im2col accounting."""
+    key = jax.random.PRNGKey(8)
+    b, hw, cin, cout = (2, 8, 16, 16) if smoke else (8, 32, 64, 64)
+    iters = 2 if smoke else 5
+    params = {"k": jax.random.normal(key, (3, 3, cin, cout)) * 1e-2}
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, hw, hw, cin)) * 1e-2
+
+    def loss_fn(p, batch, pol_):
+        y = pol_.conv(batch, p["k"])
+        return jnp.sum(y * y), {}
+
+    lane = {"b": b, "hw": hw, "cin": cin, "cout": cout}
+    lane.update(_banked_lane_times(loss_fn, params, x, iters))
+    lane["modeled_hbm_bytes_per_elt"] = {
+        m_: modeled_hbm_bytes_conv(m_, b, hw, hw, 3, 3, cin,
+                                   cout)["bytes_per_element"]
+        for m_ in ("fig4", "payload")}
+    emit(f"conv_train_fig4_bank_{hw}", lane["fig4_bank_us"],
+         "bank steady state")
+    emit(f"conv_train_payload_bank_{hw}", lane["payload_bank_us"],
+         f"{lane['payload_vs_fig4_bank']:.2f}x vs fig4-bank "
+         f"[{b}x{hw}x{hw}x{cin}]*[3x3x{cin}x{cout}]")
+    results["conv"].append(lane)
+
+
 def main(smoke: bool = False):
     results = {"backend": nbackend.get_backend().name,
                "platform": jax.default_backend(),
                "truncate": [], "quantize": [], "matmul": [], "stats": [],
-               "gemm": []}
+               "gemm": [], "moe": [], "conv": []}
     key = jax.random.PRNGKey(0)
 
     if smoke:
-        # CI regression gate: the two train-step lanes (gemm + stats) on
-        # tiny shapes — seconds, not minutes; numbers are not recorded.
-        # (The truncate/quantize/matmul microlanes are covered by the unit
-        # tests that run earlier in the same CI job.)
+        # CI regression gate: the train-step lanes (gemm + moe + conv +
+        # stats) on tiny shapes — seconds, not minutes; numbers are not
+        # recorded.  (The truncate/quantize/matmul microlanes are covered
+        # by the unit tests that run earlier in the same CI job.)
         bench_gemm(results, sizes=(256,), smoke=True)
+        bench_moe(results, smoke=True)
+        bench_conv(results, smoke=True)
         bench_statsbank(results, smoke=True)
         # falsifiable structure checks: every expected lane must have been
         # emitted with finite timings (a lane that silently skipped its
         # work, or a refactor that dropped one, fails the build here)
-        assert len(results["gemm"]) == 1 and len(results["stats"]) == 1, \
+        assert all(len(results[k]) == 1
+                   for k in ("gemm", "moe", "conv", "stats")), \
             {k: len(v) for k, v in results.items() if isinstance(v, list)}
         import math as _math
         for want in ("fig4_exact_us", "fig4_bank_us", "payload_bank_us"):
             v = results["gemm"][0][want]
             assert _math.isfinite(v), (want, v)
+        for lane in ("moe", "conv"):
+            for want in ("fig4_bank_us", "payload_bank_us"):
+                v = results[lane][0][want]
+                assert _math.isfinite(v), (lane, want, v)
         assert _math.isfinite(results["stats"][0]["bank_step_us"])
         print("# smoke ok (no JSON written)")
         return
@@ -270,6 +401,8 @@ def main(smoke: bool = False):
     bench_truncate(results)
     bench_statsbank(results)
     bench_gemm(results)
+    bench_moe(results)
+    bench_conv(results)
 
     for n in [1 << 16, 1 << 20, 1 << 22]:
         x = jax.random.normal(key, (n,)) * 1e-5

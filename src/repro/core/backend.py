@@ -42,7 +42,8 @@ the caller holds (per-shard inside ``shard_map``), while
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+import string
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -114,69 +115,237 @@ class NumericsBackend:
         (``fmt`` = the truncation's payload format)."""
         raise NotImplementedError
 
+    def qmatmul_batched(self, a: S2FP8Tensor, b: S2FP8Tensor, *,
+                        layout: str = "nn", out_batch: Optional[int] = None,
+                        epilogue_stats=None, fmt: str = "e5m2") -> jnp.ndarray:
+        """Batched payload-domain GEMM on 3-D payloads.
+
+        ``a.payload`` is ``[Ga, ...]``, ``b.payload`` ``[Gb, ...]`` with a
+        per-slice shape per ``layout`` (kernels/ref.py ``gemm_dims`` on the
+        trailing two dims).  The combined batch is ``G = max(Ga, Gb)``;
+        ``Ga`` and ``Gb`` must divide it, and the slice an operand
+        contributes to combined step ``g`` is ``g % Gx`` — the
+        trailing-aligned broadcast the MoE broadcast-on-B shapes
+        (``becd,edf``) flatten to.  ``out_batch`` (default ``G``) < ``G``
+        sums groups of ``G // out_batch`` adjacent-in-``g // out_batch``
+        slices into one output slice — the weight-gradient reduction of a
+        broadcast operand.  ``epilogue_stats`` fuses the output-site Eq. 5
+        truncation exactly as in :meth:`qmatmul`."""
+        raise NotImplementedError
+
     def qdot_general(self, a: S2FP8Tensor, b: S2FP8Tensor, dimension_numbers,
                      *, epilogue_stats=None, fmt: str = "e5m2") -> jnp.ndarray:
         """General-rank payload-domain contraction.
 
-        Maps a restricted ``lax.dot_general``-style contraction — single
-        contracting dim sitting first or last on each operand, no batch
-        dims — onto the 2-D ``qmatmul`` via payload reshapes (1-byte
-        moves) and a layout pick.  Raises ``ValueError`` for contractions
-        outside that family; callers gate on
-        :func:`qdot_general_supported`."""
+        Maps a ``lax.dot_general``-style contraction — single contracting
+        dim at the boundary of each operand's free dims, batch dims (if
+        any) leading and in order — onto the 2-D ``qmatmul`` or the
+        batched ``qmatmul_batched`` via payload reshapes (1-byte moves).
+        Raises ``ValueError`` for contractions outside that family;
+        callers gate on :func:`qdot_general_supported`."""
         plan = plan_qdot_general(a.shape, b.shape, dimension_numbers)
         if plan is None:
             raise ValueError(
                 f"qdot_general cannot map dimension_numbers "
                 f"{dimension_numbers} on {a.shape} x {b.shape} onto a "
                 f"payload GEMM; gate with qdot_general_supported()")
-        layout, a2_shape, b2_shape, out_shape = plan
-        y = self.qmatmul(a.reshape(a2_shape), b.reshape(b2_shape),
-                         layout=layout, epilogue_stats=epilogue_stats,
-                         fmt=fmt)
-        return y.reshape(out_shape)
+        return execute_qdot_plan(self, plan, a, b,
+                                 epilogue_stats=epilogue_stats, fmt=fmt)
 
     def __repr__(self):
         return f"<NumericsBackend {self.name!r}>"
 
 
-def plan_qdot_general(a_shape, b_shape, dimension_numbers):
-    """(layout, a2_shape, b2_shape, out_shape) mapping a restricted
-    dot_general onto one 2-D payload GEMM, or None when unsupported.
+class QdotPlan(NamedTuple):
+    """How one contraction maps onto the payload GEMM kernels.
 
-    Supported: a single contracting dim per operand, positioned first or
-    last (so the remaining dims flatten contiguously), and no batch dims.
-    (first, last) on (a, b) — the "tt" case — has no kernel layout and
-    returns None.
+    The first four fields keep the PR-3 tuple layout (layout, operand
+    reshape targets, final output shape); ``batch`` / ``b_batch`` carry
+    the batched extension.  ``batch == 1`` is a plain 2-D GEMM (the shapes
+    are 2-D); ``batch > 1`` makes ``a2_shape`` a full-combined-batch 3-D
+    ``(G, ., .)`` and ``b2_shape`` a ``(Gb, ., .)`` with ``Gb | G`` —
+    ``Gb < G`` broadcasts B across the leading ``G // Gb`` groups (the
+    ``becd,edf`` family)."""
+
+    layout: str
+    a2_shape: Tuple[int, ...]
+    b2_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    batch: int = 1
+    b_batch: int = 1
+
+
+def execute_qdot_plan(backend_obj: NumericsBackend, plan: QdotPlan,
+                      a: S2FP8Tensor, b: S2FP8Tensor, *,
+                      epilogue_stats=None, fmt: str = "e5m2") -> jnp.ndarray:
+    """Run a planned contraction on quantized operands: payload reshapes
+    (1-byte moves), then the 2-D or batched kernel, then the output
+    reshape."""
+    qa, qb = a.reshape(plan.a2_shape), b.reshape(plan.b2_shape)
+    if plan.batch == 1:
+        y = backend_obj.qmatmul(qa, qb, layout=plan.layout,
+                                epilogue_stats=epilogue_stats, fmt=fmt)
+    else:
+        y = backend_obj.qmatmul_batched(qa, qb, layout=plan.layout,
+                                        epilogue_stats=epilogue_stats,
+                                        fmt=fmt)
+    return y.reshape(plan.out_shape)
+
+
+def _prod(dims) -> int:
+    p = 1
+    for d in dims:
+        p *= d
+    return p
+
+
+def _plan_from_parts(layout: str, batch_dims, b_batch_dims, m: int, k: int,
+                     n: int, out_shape) -> Optional[QdotPlan]:
+    """Assemble a QdotPlan from the decomposed contraction: combined batch
+    dims (all of A's leading dims), B's stored batch dims (a trailing
+    subset), per-slice (m, k, n), and the logical output shape."""
+    g, gb = _prod(batch_dims), _prod(b_batch_dims)
+    if 0 in (g, gb, m, k, n):
+        return None                      # degenerate sizes: no kernel path
+    if layout == "nn":
+        a2, b2 = (m, k), (k, n)
+    elif layout == "nt":
+        a2, b2 = (m, k), (n, k)
+    elif layout == "tn":
+        a2, b2 = (k, m), (k, n)
+    else:
+        return None
+    if g == 1:
+        return QdotPlan(layout, a2, b2, tuple(out_shape))
+    return QdotPlan(layout, (g,) + a2, (gb,) + b2, tuple(out_shape), g, gb)
+
+
+def plan_qdot_general(a_shape, b_shape, dimension_numbers
+                      ) -> Optional[QdotPlan]:
+    """Map a dot_general onto a payload GEMM, or None when unsupported.
+
+    Supported: a single contracting dim per operand positioned at the
+    boundary of the free dims (first or last of the non-batch dims, so
+    the rest flatten contiguously), and batch dims — if any — leading and
+    in order on BOTH operands (the shape einsum lowering produces for the
+    MoE/attention contractions).  The plan's output shape follows the
+    dot_general convention ``batch + a_free + b_free``.  (first, last) on
+    (a, b) — the "tt" case — has no kernel layout and returns None.
     """
     (ca, cb), (batch_a, batch_b) = dimension_numbers
-    if batch_a or batch_b or len(ca) != 1 or len(cb) != 1:
+    if len(ca) != 1 or len(cb) != 1:
+        return None
+    nb = len(batch_a)
+    if tuple(batch_a) != tuple(range(nb)) or \
+            tuple(batch_b) != tuple(range(nb)):
+        return None
+    if a_shape[:nb] != b_shape[:nb]:
         return None
     ca, cb = ca[0], cb[0]
-    if ca not in (0, len(a_shape) - 1) or cb not in (0, len(b_shape) - 1):
+    if ca not in (nb, len(a_shape) - 1) or cb not in (nb, len(b_shape) - 1):
         return None
     a_last = ca == len(a_shape) - 1
-    b_first = cb == 0
+    b_first = cb == nb
     if not a_last and not b_first:
         return None                      # "tt": no layout variant
     k = a_shape[ca]
     if k != b_shape[cb]:
         return None
-    a_rest = tuple(d for i, d in enumerate(a_shape) if i != ca)
-    b_rest = tuple(d for i, d in enumerate(b_shape) if i != cb)
-    m = 1
-    for d in a_rest:
-        m *= d
-    n = 1
-    for d in b_rest:
-        n *= d
-    if a_last and b_first:
-        layout, a2, b2 = "nn", (m, k), (k, n)
-    elif a_last:                         # b contracts on its last dim
-        layout, a2, b2 = "nt", (m, k), (n, k)
-    else:                                # a contracts on its first dim
-        layout, a2, b2 = "tn", (k, m), (k, n)
-    return layout, a2, b2, a_rest + b_rest
+    a_rest = tuple(d for i, d in enumerate(a_shape) if i >= nb and i != ca)
+    b_rest = tuple(d for i, d in enumerate(b_shape) if i >= nb and i != cb)
+    layout = "nn" if (a_last and b_first) else ("nt" if a_last else "tn")
+    return _plan_from_parts(layout, a_shape[:nb], a_shape[:nb],
+                            _prod(a_rest), k, _prod(b_rest),
+                            a_shape[:nb] + a_rest + b_rest)
+
+
+
+
+def plan_einsum(spec: str, a_shape, b_shape) -> Optional[QdotPlan]:
+    """Map a two-operand einsum onto a payload GEMM, or None.
+
+    The supported family generalizes the PR-3 ``"...k,kn->...n"``
+    whitelist to every contraction the batched kernels execute:
+
+      * exactly one contracted label, sitting first or last among each
+        operand's non-batch labels (no "tt", no multi-label contraction,
+        no sum-over-free);
+      * B's labels are ``shared-batch + free/contract``; A's are
+        ``lead + shared-batch + free/contract`` where ``lead`` are free
+        labels only (they broadcast B — the ``becd,edf`` family);
+      * the output is exactly ``lead + shared + a_free + b_free`` — the
+        order the batched GEMM produces, so the plan is pure reshapes.
+
+    This covers the dense ``bsd,df->bsf`` family (empty batch), the MoE
+    expert einsums ``ecd,edf->ecf`` / ``becd,edf->becf``, and the
+    attention contractions ``bkgqd,bksd->bkgqs`` / ``bkgqs,bksd->bkgqd``.
+    """
+    if "->" not in spec:
+        return None
+    lhs, lo = spec.replace(" ", "").split("->")
+    parts = lhs.split(",")
+    if len(parts) != 2:
+        return None
+    la, lb = parts
+    if "." in lb:
+        return None                      # ellipsis rhs: ambiguous layout
+    if "..." in la:
+        # concretize "..." with fresh labels, shared between lhs and out
+        n_ell = len(a_shape) - (len(la) - 3)
+        if n_ell < 0 or "..." not in lo:
+            return None
+        fresh = "".join(c for c in string.ascii_letters
+                        if c not in spec)[:n_ell]
+        if len(fresh) != n_ell:
+            return None
+        la = la.replace("...", fresh)
+        lo = lo.replace("...", fresh)
+    if "." in la + lo or len(la) != len(a_shape) or len(lb) != len(b_shape):
+        return None
+    if len(set(la)) != len(la) or len(set(lb)) != len(lb) \
+            or len(set(lo)) != len(lo):
+        return None
+    sa, sb, so = set(la), set(lb), set(lo)
+    if not so <= (sa | sb):
+        return None
+    contract = (sa & sb) - so
+    if len(contract) != 1:
+        return None
+    k_lab = contract.pop()
+    if (sa - {k_lab}) - so or (sb - {k_lab}) - so:
+        return None                      # sum-over-free: not a pure GEMM
+    shared = "".join(c for c in la if c in sb and c != k_lab)
+    if not lb.startswith(shared):
+        return None
+    rb = lb[len(shared):]
+    if shared:
+        i0 = la.index(shared[0])
+        if la[i0:i0 + len(shared)] != shared:
+            return None
+        lead, ra = la[:i0], la[i0 + len(shared):]
+        if any(c in sb for c in lead):
+            return None                  # shared labels must be contiguous
+    else:
+        lead, ra = "", la
+    fa = "".join(c for c in ra if c != k_lab)
+    fb = "".join(c for c in rb if c != k_lab)
+    if ra not in (fa + k_lab, k_lab + fa) or rb not in (k_lab + fb, fb + k_lab):
+        return None
+    if lo != lead + shared + fa + fb:
+        return None
+    a_last, b_first = ra.endswith(k_lab), rb.startswith(k_lab)
+    if not a_last and not b_first:
+        return None                      # "tt"
+    dims = dict(zip(la, a_shape))
+    for c, d in zip(lb, b_shape):
+        if dims.setdefault(c, d) != d:
+            return None
+    layout = "nn" if (a_last and b_first) else ("nt" if a_last else "tn")
+    return _plan_from_parts(
+        layout, tuple(dims[c] for c in lead + shared),
+        tuple(dims[c] for c in shared),
+        _prod(dims[c] for c in fa), dims[k_lab], _prod(dims[c] for c in fb),
+        tuple(dims[c] for c in lo))
 
 
 def qdot_general_supported(a_shape, b_shape, dimension_numbers) -> bool:
@@ -234,6 +403,16 @@ class RefBackend(NumericsBackend):
         if epilogue_stats is not None:
             # the "epilogue" through this engine's pinned truncate program
             # — bitwise-comparable with a separate output truncation
+            y = self.truncate(y, stats=epilogue_stats, fmt=fmt)
+        return y
+
+    def qmatmul_batched(self, a, b, *, layout: str = "nn", out_batch=None,
+                        epilogue_stats=None, fmt: str = "e5m2"):
+        from repro.kernels import ref
+        y = ref.s2fp8_matmul_batched_ref(a.payload, a.alpha, a.beta,
+                                         b.payload, b.alpha, b.beta,
+                                         layout=layout, out_batch=out_batch)
+        if epilogue_stats is not None:
             y = self.truncate(y, stats=epilogue_stats, fmt=fmt)
         return y
 
@@ -316,6 +495,14 @@ class PallasBackend(NumericsBackend):
                                    b.payload, b.alpha, b.beta,
                                    layout=layout, epilogue_stats=epilogue_stats,
                                    fmt=fmt, interpret=self.interpret)
+
+    def qmatmul_batched(self, a, b, *, layout: str = "nn", out_batch=None,
+                        epilogue_stats=None, fmt: str = "e5m2"):
+        from repro.kernels import dispatch
+        return dispatch.qmatmul_batched_nd(
+            a.payload, a.alpha, a.beta, b.payload, b.alpha, b.beta,
+            layout=layout, out_batch=out_batch,
+            epilogue_stats=epilogue_stats, fmt=fmt, interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -77,34 +77,6 @@ def _bf16_cast(x):
     return x.astype(jnp.bfloat16)
 
 
-@functools.lru_cache(maxsize=None)
-def _einsum_is_matmul(spec: str) -> bool:
-    """True for two-operand specs of the dense-layer family
-    ``"...k,kn->...n"`` — explicit ("bsd,df->bsf") or ellipsis
-    ("...d,df->...f") batch dims — the shapes ``qdot_train`` executes
-    payload-domain.  Batched/multi-contraction specs return False and
-    keep the composed Fig. 4 chain."""
-    if "->" not in spec:
-        return False
-    lhs, out = spec.replace(" ", "").split("->")
-    parts = lhs.split(",")
-    if len(parts) != 2:
-        return False
-    la, lb = parts
-    if len(lb) != 2 or "." in lb:
-        return False
-    k, n = lb
-    if la.startswith("..."):
-        la = la[3:]
-        if not (out.startswith("...") and la):
-            return False
-        out = out[3:]
-    if "." in la or "." in out or len(set(la)) != len(la):
-        return False
-    return (k != n and la[-1] == k and n not in la
-            and out == la[:-1] + n)
-
-
 @dataclasses.dataclass(frozen=True)
 class Policy:
     """Numeric execution policy for all bilinear ops in a model."""
@@ -143,15 +115,16 @@ class Policy:
         if self.gemm_mode not in GEMM_MODES:
             raise ValueError(f"unknown gemm_mode {self.gemm_mode!r}; "
                              f"want one of {GEMM_MODES}")
-        if self.gemm_mode == "payload" and (
-                not self.truncate_output or self.output_dtype is not None):
+        if self.gemm_mode == "payload" and not self.truncate_output:
             # refuse rather than silently downgrade an explicit request:
-            # the payload path fuses the output truncation (needs
-            # truncate_output) and accumulates/emits f32 (the bf16
-            # output_dtype lever belongs to the fig4 chain)
+            # the payload path fuses the output truncation into the GEMM
+            # epilogue, so it cannot represent truncate_output=False.
+            # (output_dtype="bfloat16" IS honored: the kernel accumulates
+            # and emits f32, and the payload return rounds to bf16 at the
+            # GEMM boundary exactly where the fig4 chain does.)
             raise ValueError(
-                "gemm_mode='payload' requires truncate_output=True and "
-                "output_dtype=None; use gemm_mode='auto' or 'fig4'")
+                "gemm_mode='payload' requires truncate_output=True; "
+                "use gemm_mode='auto' or 'fig4'")
 
     # -- operand / output transforms ------------------------------------
     @property
@@ -185,12 +158,11 @@ class Policy:
         """Whether s2fp8 GEMMs route through ``qdot_train``
         (core/qdot.py).  Requires ``truncate_output`` (the payload path
         fuses the output truncation as a kernel epilogue — Fig. 4's full
-        dataflow) and the default f32 GEMM-boundary dtype (the kernel
-        accumulates and emits f32, paper-strict — the bf16
-        ``output_dtype`` lever belongs to the fig4 chain); "auto"
-        resolves to payload on the pallas engines and fig4 on ref."""
-        if self.mode not in ("s2fp8", "s2fp8_e4m3") or not self.truncate_output \
-                or self.output_dtype is not None:
+        dataflow); the bf16 ``output_dtype`` lever is honored by rounding
+        the kernel's f32 output at the GEMM boundary (within-GEMM
+        accumulation stays f32 either way).  "auto" resolves to payload
+        on the pallas engines and fig4 on ref."""
+        if self.mode not in ("s2fp8", "s2fp8_e4m3") or not self.truncate_output:
             return False                 # "payload" here is unreachable:
         if self.gemm_mode != "auto":     # __post_init__ rejects the combo
             return self.gemm_mode == "payload"
@@ -210,53 +182,133 @@ class Policy:
             return self._wrap(y)
         return y
 
+    def _qdot_out(self, y, dtype):
+        """Cast a payload-path f32 result to the caller's dtype, honoring
+        the bf16 GEMM-boundary lever on the way: rounding through
+        ``accum_dtype`` is exactly where the fig4 chain's
+        ``preferred_element_type`` rounds, so the two gemm_modes agree on
+        output dtype (and boundary rounding) for every policy config."""
+        return y.astype(self.accum_dtype).astype(dtype)
+
     # -- bilinear ops -----------------------------------------------------
+    # All GEMM returns cast to jnp.result_type(a, b) — mixed-dtype
+    # operands (f32 weights x bf16 activations) follow the contraction's
+    # own promotion on every API (dot == dot_general == einsum) instead
+    # of silently downcasting to the first operand.
     def dot(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         if self._qdot_routable(a, b):
             y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
-            return y.astype(a.dtype)
+            return self._qdot_out(y, jnp.result_type(a, b))
         w = self._wrap
         y = jnp.dot(w(a), w(b), preferred_element_type=self.accum_dtype)
-        return self._wrap_out(y).astype(a.dtype)
+        return self._wrap_out(y).astype(jnp.result_type(a, b))
 
     def dot_general(self, a, b, dimension_numbers) -> jnp.ndarray:
-        # one support-check source: the backend planner.  Of the plannable
-        # family, the "nn" orientation is the [..., K] x [K, N] shape
-        # qdot_train's NT/TN backward is built for; other contractions
-        # keep the composed Fig. 4 chain.
-        plan = nbackend.plan_qdot_general(a.shape, b.shape, dimension_numbers)
-        if (plan is not None and plan[0] == "nn"
-                and self._qdot_routable(a, b)):
-            y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
-            return y.astype(a.dtype)
+        # one support-check source: the backend planner.  Everything it
+        # maps — dense, batched, NT/TN orientations — runs payload-domain;
+        # contractions outside the planned family keep the composed
+        # Fig. 4 chain.
+        plan = (nbackend.plan_qdot_general(a.shape, b.shape,
+                                           dimension_numbers)
+                if self.uses_payload_gemm else None)
+        if plan is not None:
+            y = qdot_mod.qdot_train(a, b, plan=plan, backend=self.backend,
+                                    fmt=self._fmt)
+            return self._qdot_out(y, jnp.result_type(a, b))
         w = self._wrap
         y = jax.lax.dot_general(
             w(a), w(b), dimension_numbers, preferred_element_type=self.accum_dtype
         )
-        return self._wrap_out(y).astype(a.dtype)
+        return self._wrap_out(y).astype(jnp.result_type(a, b))
 
     def einsum(self, spec: str, *operands) -> jnp.ndarray:
-        if (len(operands) == 2 and _einsum_is_matmul(spec)
-                and self._qdot_routable(*operands)):
-            a, b = operands
-            y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
-            return y.astype(a.dtype)
+        # planner-driven routing (replaces the PR-3 "...k,kn->...n"
+        # whitelist): any two-operand contraction the batched payload
+        # kernels execute — dense, batched (MoE ecd,edf), broadcast-on-B
+        # (becd,edf), attention score/value — goes payload-domain.
+        if len(operands) == 2 and self.uses_payload_gemm:
+            plan = nbackend.plan_einsum(spec, operands[0].shape,
+                                        operands[1].shape)
+            if plan is not None:
+                y = qdot_mod.qdot_train(*operands, plan=plan,
+                                        backend=self.backend, fmt=self._fmt)
+                return self._qdot_out(y, jnp.result_type(*operands))
         w = self._wrap
         y = jnp.einsum(
             spec, *[w(o) for o in operands], preferred_element_type=self.accum_dtype
         )
-        return self._wrap_out(y).astype(operands[0].dtype)
+        # jnp.result_type, not operands[0].dtype: mixed-dtype operands
+        # (f32 weights x bf16 activations) must follow einsum's own
+        # promotion instead of silently downcasting to the first operand
+        return self._wrap_out(y).astype(jnp.result_type(*operands))
 
     def conv(self, x, kernel, *, stride=(1, 1), padding="SAME") -> jnp.ndarray:
-        """NHWC x HWIO conv — the ResNet path (conv is a GEMM to the paper)."""
+        """NHWC x HWIO conv — the ResNet path (conv is a GEMM to the paper).
+
+        On the payload path the conv lowers to the payload GEMM via an
+        im2col patch-extraction prologue (:meth:`_conv_im2col`): patches
+        stream into the quantizer once and the contraction runs on 1-byte
+        operands with the fused Eq. 5 epilogue, exactly like ``dot``."""
+        if self.uses_payload_gemm:
+            return self._conv_im2col(x, kernel, stride, padding)
         w = self._wrap
+        wx, wk = w(x), w(kernel)
+        # lax.conv rejects a preferred_element_type NARROWER than the
+        # operands (the bf16 boundary lever on f32 inputs): accumulate at
+        # the wider of (accum_dtype, operand dtype) and round at the GEMM
+        # boundary instead — the same place the dot/einsum paths round.
+        # The boundary astype is a no-op when accum_dtype was legal.
+        op_dtype = jnp.result_type(wx, wk)
+        pety = (op_dtype if jnp.dtype(self.accum_dtype).itemsize
+                < jnp.dtype(op_dtype).itemsize else self.accum_dtype)
         y = jax.lax.conv_general_dilated(
-            w(x), w(kernel),
-            window_strides=stride, padding=padding,
+            wx, wk, window_strides=stride, padding=padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            preferred_element_type=self.accum_dtype,
-        )
+            preferred_element_type=pety,
+        ).astype(self.accum_dtype)
         return self._wrap_out(y).astype(x.dtype)
+
+    def _conv_im2col(self, x, kernel, stride, padding):
+        """Payload-domain conv: im2col gather -> dense payload GEMM.
+
+        The patch tensor ``[B, OH, OW, KH*KW*C]`` is built from KH*KW
+        strided slices of the zero-padded input (stride/padding handled
+        in the gather; zero-padding is exact for S2FP8 — padding zeros
+        are excluded from stats and quantize to zero payloads), reshaped
+        against ``kernel`` flattened to ``[KH*KW*C, F]`` — the dense
+        ``[..., K] x [K, N]`` family ``qdot_train`` executes with payload
+        residuals and the NT/TN payload backward (the conv VJP is the
+        GEMM VJP scattered back through the slices' transpose).  Output
+        dims are validated against ``lax.conv_general_dilated``."""
+        kh, kw, cin, cout = kernel.shape
+        sh, sw = stride
+        if isinstance(padding, str):
+            pads = jax.lax.padtype_to_pads(x.shape[1:3], (kh, kw),
+                                           (sh, sw), padding)
+        else:
+            pads = list(padding)
+        xp = jnp.pad(x, ((0, 0),) + tuple(pads) + ((0, 0),))
+        b, hp, wp, _ = xp.shape
+        oh = (hp - kh) // sh + 1
+        ow = (wp - kw) // sw + 1
+        cols = [jax.lax.slice(xp, (0, i, j, 0),
+                              (b, i + (oh - 1) * sh + 1,
+                               j + (ow - 1) * sw + 1, cin),
+                              (1, sh, sw, 1))
+                for i in range(kh) for j in range(kw)]
+        patches = jnp.concatenate(cols, axis=-1)     # [B, OH, OW, KH*KW*C]
+        y = qdot_mod.qdot_train(patches, kernel.reshape(kh * kw * cin, cout),
+                                backend=self.backend, fmt=self._fmt)
+        expected = jax.eval_shape(
+            lambda x_, k_: jax.lax.conv_general_dilated(
+                x_, k_, window_strides=stride, padding=padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")), x, kernel).shape
+        if y.shape != expected:
+            raise ValueError(
+                f"im2col conv lowering produced {y.shape}, but "
+                f"lax.conv_general_dilated would produce {expected} "
+                f"(stride={stride}, padding={padding!r})")
+        return self._qdot_out(y, x.dtype)
 
     def qdot(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         """Payload-domain GEMM: quantize both operands to S2FP8 storage and

@@ -24,20 +24,34 @@ Backward (paper Fig. 4's two transposed GEMMs, payload-domain)::
     dB = qmatmul(qA, qG, layout="tn", epilogue_stats=b-site bwd stats)
 
 The NT/TN layouts read the saved payloads through swapped BlockSpec index
-maps — no transpose is materialized.
+maps — no transpose is materialized.  For non-"nn" forward layouts (the
+attention-logits ``nt`` contraction) the backward pair comes from
+``_BWD_GEMMS`` — the same table, re-oriented.
+
+Batched contractions (MoE expert einsums, attention score/value products,
+im2col'd convs) ride the same machinery through a
+:class:`repro.core.backend.QdotPlan`: the operands reshape (1-byte moves)
+onto a ``(G, ., .)`` batched payload GEMM — broadcast-on-B shapes like
+``becd,edf`` keep B stored once at ``Gb < G`` and dB accumulates the
+``G // Gb`` broadcast groups in-kernel (``out_batch``).  The six-direction
+StatsBank node and the payload residuals are shape-agnostic, so a batched
+node costs exactly what a dense node costs in stats state.
 
 Numerics anchor: ``dequantize(quantize(x, s)) == truncate(x, s)``
 elementwise, so with shared (bank) stats the payload-domain forward equals
 the Fig. 4 chain *bitwise* — asserted ref-vs-pallas in
-tests/test_qdot_train.py.  Stale bank stats saturate at the format max
-inside quantize and the epilogue (never inf).
+tests/test_qdot_train.py (dense) and tests/test_qdot_batched.py (batched).
+Stale bank stats saturate at the format max inside quantize and the
+epilogue (never inf).
 
 Stats lifecycle: inside a StatsBank session each ``qdot_train`` call is
 one bank node with six per-direction states (statsbank.GEMM_DIRS); all
 refreshes run under ``lax.cond`` on the session cadence, so steady-state
 steps execute ZERO stats reductions and exactly three payload GEMMs +
 three elementwise quantizations per node.  Outside a session the exact
-path quantizes with fresh per-call stats (eval / ad-hoc callers).
+path quantizes with fresh per-call stats (eval / ad-hoc callers);
+discovery traces route through that same exact path, so step-0 numerics
+match every later step (site registration still happens first).
 """
 from __future__ import annotations
 
@@ -50,10 +64,34 @@ import jax.numpy as jnp
 from repro.core import backend as nbackend
 from repro.core import s2fp8
 from repro.core import statsbank
+from repro.core.backend import QdotPlan
+
+# Backward GEMM table: forward layout -> ((dA lhs, dA rhs, dA layout),
+# (dB lhs, dB rhs, dB layout)) with operands named from {"a", "b", "g"}
+# (saved payloads + quantized cotangent).  Derivation: transpose the
+# forward contraction; every entry reads the stored payloads through
+# index-map swaps only.
+_BWD_GEMMS = {
+    "nn": (("g", "b", "nt"), ("a", "g", "tn")),
+    "nt": (("g", "b", "nn"), ("g", "a", "tn")),
+    "tn": (("b", "g", "nt"), ("a", "g", "nn")),
+}
+
+
+def _qmm(be, qx, qy, layout, *, out_batch=None, epilogue_stats=None,
+         fmt="e5m2"):
+    """Rank dispatch: 2-D payloads -> ``qmatmul``, 3-D -> the batched
+    kernel (``out_batch`` reduces broadcast groups, e.g. dB of a
+    broadcast weight)."""
+    if qx.payload.ndim == 2:
+        return be.qmatmul(qx, qy, layout=layout,
+                          epilogue_stats=epilogue_stats, fmt=fmt)
+    return be.qmatmul_batched(qx, qy, layout=layout, out_batch=out_batch,
+                              epilogue_stats=epilogue_stats, fmt=fmt)
 
 
 def _epilogue_qmatmul(qa, qb, layout, st, pred_f, step_f, cfg, fmt,
-                      backend, target_max):
+                      backend, target_max, out_batch=None):
     """Sited payload GEMM with fused output truncation.
 
     Steady state (no refresh due): ONE kernel launch — the Eq. 5 epilogue
@@ -67,7 +105,7 @@ def _epilogue_qmatmul(qa, qb, layout, st, pred_f, step_f, cfg, fmt,
     need = jnp.logical_or(pred_f > 0, st["last"] < 0)
 
     def _refresh(_):
-        y_raw = be.qmatmul(qa, qb, layout=layout)
+        y_raw = _qmm(be, qa, qb, layout, out_batch=out_batch, fmt=fmt)
         new = statsbank.refresh_state(
             y_raw, st, step_f, ema_decay=cfg.ema_decay,
             target_max=target_max, backend=backend, axis_name=cfg.axis_name)
@@ -75,20 +113,36 @@ def _epilogue_qmatmul(qa, qb, layout, st, pred_f, step_f, cfg, fmt,
                            fmt=fmt), new
 
     def _fused(_):
-        y = be.qmatmul(qa, qb, layout=layout,
-                       epilogue_stats=(st["alpha"], st["beta"]), fmt=fmt)
+        y = _qmm(be, qa, qb, layout, out_batch=out_batch,
+                 epilogue_stats=(st["alpha"], st["beta"]), fmt=fmt)
         return y, st
 
     return jax.lax.cond(need, _refresh, _fused, None)
 
 
+def _gemm_structure(plan: Optional[QdotPlan]):
+    """(fwd layout, dA/dB specs) for a plan; plan=None is the dense "nn"
+    family.  Each backward spec is (lhs name, rhs name, layout,
+    out_batch): out_batch reduces the broadcast groups when the
+    differentiated operand is stored broadcast (Gb < G)."""
+    layout = "nn" if plan is None else plan.layout
+    (da_l, da_r, da_lay), (db_l, db_r, db_lay) = _BWD_GEMMS[layout]
+    if plan is None or plan.batch == 1:
+        a_ob = b_ob = None
+    else:
+        a_ob, b_ob = plan.batch, plan.b_batch
+    return layout, (da_l, da_r, da_lay, a_ob), (db_l, db_r, db_lay, b_ob)
+
+
 @functools.lru_cache(maxsize=None)
-def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig):
-    """custom_vjp payload GEMM over (a2, b, entry, pred_f, step_f); cached
-    per (backend, fmt, cfg) so the callable is stable under jit tracing.
-    The bank entry is a differentiated argument whose cotangent is the
-    refreshed entry (the StatsBank update idiom)."""
+def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
+                 plan: Optional[QdotPlan] = None):
+    """custom_vjp payload GEMM over (a2, b2, entry, pred_f, step_f); cached
+    per (backend, fmt, cfg, plan) so the callable is stable under jit
+    tracing.  The bank entry is a differentiated argument whose cotangent
+    is the refreshed entry (the StatsBank update idiom)."""
     target_max = s2fp8.FMT_TARGET_MAX[fmt]
+    layout, da_spec, db_spec = _gemm_structure(plan)
 
     def _fwd(a, b, entry, pred_f, step_f):
         be = nbackend.get_backend(backend)
@@ -98,7 +152,7 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig):
             b, entry["b.fwd"], pred_f, step_f, cfg, target_max, backend)
         qa = be.quantize(a, stats=(aa, ab), fmt=fmt)
         qb = be.quantize(b, stats=(ba, bb), fmt=fmt)
-        y, new_of = _epilogue_qmatmul(qa, qb, "nn", entry["out.fwd"],
+        y, new_of = _epilogue_qmatmul(qa, qb, layout, entry["out.fwd"],
                                       pred_f, step_f, cfg, fmt, backend,
                                       target_max)
         # Residuals: 1-byte payloads + scalar site states.  The f32
@@ -119,10 +173,15 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig):
         ga, gb, new_ob = statsbank.maybe_refresh(
             g, out_bwd, pred_f, step_f, cfg, target_max, backend)
         qg = be.quantize(g, stats=(ga, gb), fmt=fmt)
-        dA, new_ab = _epilogue_qmatmul(qg, qb, "nt", a_bwd, pred_f, step_f,
-                                       cfg, fmt, backend, target_max)
-        dB, new_bb = _epilogue_qmatmul(qa, qg, "tn", b_bwd, pred_f, step_f,
-                                       cfg, fmt, backend, target_max)
+        ops = {"a": qa, "b": qb, "g": qg}
+        dl, dr, dlay, dob = da_spec
+        dA, new_ab = _epilogue_qmatmul(ops[dl], ops[dr], dlay, a_bwd,
+                                       pred_f, step_f, cfg, fmt, backend,
+                                       target_max, out_batch=dob)
+        dl, dr, dlay, dob = db_spec
+        dB, new_bb = _epilogue_qmatmul(ops[dl], ops[dr], dlay, b_bwd,
+                                       pred_f, step_f, cfg, fmt, backend,
+                                       target_max, out_batch=dob)
         entry_cot = {"a.fwd": new_af, "a.bwd": new_ab, "b.fwd": new_bf,
                      "b.bwd": new_bb, "out.fwd": new_of, "out.bwd": new_ob}
         return (dA, dB, entry_cot,
@@ -134,17 +193,19 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig):
 
 
 @functools.lru_cache(maxsize=None)
-def _qdot_exact(backend: Optional[str], fmt: str):
+def _qdot_exact(backend: Optional[str], fmt: str,
+                plan: Optional[QdotPlan] = None):
     """Sessionless variant: fresh exact stats per call (one reduction per
     tensor, like the exact-stats Fig. 4 chain) but still payload-domain
     compute and payload residuals."""
     target_max = s2fp8.FMT_TARGET_MAX[fmt]
+    layout, da_spec, db_spec = _gemm_structure(plan)
 
     def _fwd(a, b):
         be = nbackend.get_backend(backend)
         qa = be.quantize(a, fmt=fmt)
         qb = be.quantize(b, fmt=fmt)
-        y_raw = be.qmatmul(qa, qb)
+        y_raw = _qmm(be, qa, qb, layout, fmt=fmt)
         so = be.compute_stats(y_raw, fmt=fmt)
         return be.truncate(y_raw, stats=so, fmt=fmt), (qa, qb)
 
@@ -156,11 +217,13 @@ def _qdot_exact(backend: Optional[str], fmt: str):
         qa, qb = res
         be = nbackend.get_backend(backend)
         qg = be.quantize(g, fmt=fmt)
-        dA = be.qmatmul(qg, qb, layout="nt")
-        dA = be.truncate(dA, stats=be.compute_stats(dA, fmt=fmt), fmt=fmt)
-        dB = be.qmatmul(qa, qg, layout="tn")
-        dB = be.truncate(dB, stats=be.compute_stats(dB, fmt=fmt), fmt=fmt)
-        return dA, dB
+        ops = {"a": qa, "b": qb, "g": qg}
+        grads = []
+        for dl, dr, dlay, dob in (da_spec, db_spec):
+            d = _qmm(be, ops[dl], ops[dr], dlay, out_batch=dob, fmt=fmt)
+            grads.append(be.truncate(d, stats=be.compute_stats(d, fmt=fmt),
+                                     fmt=fmt))
+        return tuple(grads)
 
     qdot.defvjp(_fwd, _bwd)
     qdot.fwd_impl = _fwd
@@ -168,32 +231,47 @@ def _qdot_exact(backend: Optional[str], fmt: str):
 
 
 def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
+               plan: Optional[QdotPlan] = None,
                backend: Optional[str] = None, fmt: str = "e5m2"
                ) -> jnp.ndarray:
-    """Differentiable payload-domain GEMM: ``[..., K] x [K, N] -> [..., N]``.
+    """Differentiable payload-domain contraction.
+
+    Without ``plan``: the dense ``[..., K] x [K, N] -> [..., N]`` family
+    (every MLP/projection GEMM).  With a :class:`QdotPlan` (from
+    ``backend.plan_einsum`` / ``backend.plan_qdot_general``): any planned
+    contraction, including batched and broadcast-on-B shapes — the
+    operands reshape onto the plan's payload layout (1-byte moves after
+    quantization; the f32 reshapes here are views).
 
     Inside a StatsBank session this is one GEMM bank node (six
-    per-direction states, zero steady-state reductions); outside, exact
-    per-call stats.  Returns f32 (the caller casts, matching
-    ``Policy.dot``).
+    per-direction states, zero steady-state reductions); outside — and in
+    discovery traces — exact per-call stats.  Returns f32 (the caller
+    casts, matching ``Policy.dot``).
     """
-    if b.ndim != 2 or a.ndim < 1 or a.shape[-1] != b.shape[0]:
-        raise ValueError(f"qdot_train wants [..., K] x [K, N]; got "
-                         f"{a.shape} x {b.shape}")
-    out_shape = a.shape[:-1] + (b.shape[-1],)
+    if plan is None:
+        if b.ndim != 2 or a.ndim < 1 or a.shape[-1] != b.shape[0]:
+            raise ValueError(f"qdot_train wants [..., K] x [K, N]; got "
+                             f"{a.shape} x {b.shape}")
+        out_shape = a.shape[:-1] + (b.shape[-1],)
+        a2_shape, b2_shape = (-1, a.shape[-1]), b.shape
+    else:
+        out_shape = plan.out_shape
+        a2_shape, b2_shape = plan.a2_shape, plan.b2_shape
     # f32 at the custom_vjp boundary: quantization is f32-in anyway, and
     # the casts' own VJPs return bf16 cotangents to bf16 callers
-    a2 = a.reshape(-1, a.shape[-1]).astype(jnp.float32)
-    b = b.astype(jnp.float32)
+    a2 = a.reshape(a2_shape).astype(jnp.float32)
+    b2 = b.reshape(b2_shape).astype(jnp.float32)
     sess = statsbank.current_session()
     if sess is None:
-        y2 = _qdot_exact(backend, fmt)(a2, b)
+        y2 = _qdot_exact(backend, fmt, plan)(a2, b2)
     elif sess.discovery:
+        # register the bank node, then run the SAME exact payload path a
+        # sessionless call takes — step-0 (discovery-traced) numerics
+        # match every later step instead of a raw untruncated f32 dot
         sess.qdot_site()
-        y2 = jnp.dot(a2.astype(jnp.float32), b.astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
+        y2 = _qdot_exact(backend, fmt, plan)(a2, b2)
     else:
         entry = sess.qdot_site()
-        y2 = _qdot_banked(backend, fmt, sess.cfg)(
-            a2, b, entry, sess.pred_f, sess.step_f)
+        y2 = _qdot_banked(backend, fmt, sess.cfg, plan)(
+            a2, b2, entry, sess.pred_f, sess.step_f)
     return y2.reshape(out_shape)

@@ -82,7 +82,11 @@ STATE_FIELDS = ("alpha", "beta", "ema_mu", "ema_m", "last")
 # operand sites ("a", "b"), the output site ("out"), each with forward-value
 # and cotangent stats — the same six Fig. 4 sites the composed
 # ``Policy.dot`` chain visits, keyed flat so bank plumbing (stacking,
-# checkpointing, bookkeeping) is structure-agnostic.
+# checkpointing, bookkeeping) is structure-agnostic.  The states are
+# per-TENSOR scalars (paper Eq. 3–4), so one node covers any contraction
+# shape the planner maps onto the kernels — dense, batched (MoE expert
+# einsums, attention score/value products) and im2col'd convs cost the
+# same six scalars.
 GEMM_DIRS = ("a.fwd", "a.bwd", "b.fwd", "b.bwd", "out.fwd", "out.bwd")
 
 

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from repro.core import s2fp8
 from repro.kernels import auto_interpret
 from repro.kernels.ref import gemm_dims
-from repro.kernels.s2fp8_matmul import pick_gemm_block, s2fp8_matmul_pallas
+from repro.kernels.s2fp8_matmul import (pick_gemm_block, s2fp8_matmul_pallas,
+                                        s2fp8_matmul_batched_pallas)
 from repro.kernels.s2fp8_quant import (DEFAULT_BLOCK, dequant_pallas,
                                        quant_apply_pallas, quant_pallas,
                                        stats_pallas, truncate_apply_pallas,
@@ -182,6 +183,39 @@ def truncate_nd(x: jnp.ndarray, *, stats=None, fmt: str = "e5m2",
 # quantized GEMM
 # ---------------------------------------------------------------------------
 
+def _gemm_pad_plan(layout, a_payload, b_payload, bm, bk, bn, axis0: int):
+    """Shared alignment/heuristic/padding of the 2-D GEMM tile of each
+    operand (``axis0`` = index of the tile's first axis: 0 for plain
+    GEMMs, 1 for batched ones — the leading batch axis needs no padding).
+
+    Per-layout tile alignment: a GEMM dim needs the 128-lane multiple
+    only where it is the LANE (last) dim of a stored operand or of the
+    output; row dims need sublane (8).  M: sublane everywhere except
+    "tn" (lane of the stored [K, M] operand).  K: lane of A ("nn") or
+    of both operands ("nt"), rows-only under "tn".  N: always the
+    output's lane.  This keeps small-M inference GEMMs at 8-row padding
+    instead of inflating them 16x.  Returns
+    ``(a_pad, b_pad, bm_, bk_, bn_, m, n)``.
+    """
+    m, k, n = gemm_dims(layout, a_payload.shape[axis0:],
+                        b_payload.shape[axis0:])
+    ma = _ceil_to(m, LANE_ALIGN if layout == "tn" else SUBLANE_ALIGN)
+    ka = _ceil_to(k, SUBLANE_ALIGN if layout == "tn" else LANE_ALIGN)
+    na = _ceil_to(n, LANE_ALIGN)
+    hm, hk, hn = pick_gemm_block(ma, ka, na)
+    bm_ = min(hm if bm is None else bm, ma)
+    bk_ = min(hk if bk is None else bk, ka)
+    bn_ = min(hn if bn is None else bn, na)
+    mp, kp, np_ = _ceil_to(ma, bm_), _ceil_to(ka, bk_), _ceil_to(na, bn_)
+    pads = {"nn": ((mp, kp), (kp, np_)),
+            "nt": ((mp, kp), (np_, kp)),
+            "tn": ((kp, mp), (kp, np_))}[layout]
+    (ar, ac), (br, bc) = pads
+    a_pad = _pad_axis(_pad_axis(a_payload, axis0, ar), axis0 + 1, ac)
+    b_pad = _pad_axis(_pad_axis(b_payload, axis0, br), axis0 + 1, bc)
+    return a_pad, b_pad, bm_, bk_, bn_, m, n
+
+
 def qmatmul_nd(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta, *,
                layout: str = "nn", epilogue_stats=None, fmt: str = "e5m2",
                bm: Optional[int] = None, bk: Optional[int] = None,
@@ -197,28 +231,8 @@ def qmatmul_nd(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta, *,
     ``epilogue_stats=(alpha, beta)`` fuses the output-site truncation into
     the kernel's last K step.
     """
-    m, k, n = gemm_dims(layout, a_payload.shape, b_payload.shape)
-    # Per-layout tile alignment: a GEMM dim needs the 128-lane multiple
-    # only where it is the LANE (last) dim of a stored operand or of the
-    # output; row dims need sublane (8).  M: sublane everywhere except
-    # "tn" (lane of the stored [K, M] operand).  K: lane of A ("nn") or
-    # of both operands ("nt"), rows-only under "tn".  N: always the
-    # output's lane.  This keeps small-M inference GEMMs at 8-row padding
-    # instead of inflating them 16x.
-    ma = _ceil_to(m, LANE_ALIGN if layout == "tn" else SUBLANE_ALIGN)
-    ka = _ceil_to(k, SUBLANE_ALIGN if layout == "tn" else LANE_ALIGN)
-    na = _ceil_to(n, LANE_ALIGN)
-    hm, hk, hn = pick_gemm_block(ma, ka, na)
-    bm_ = min(hm if bm is None else bm, ma)
-    bk_ = min(hk if bk is None else bk, ka)
-    bn_ = min(hn if bn is None else bn, na)
-    mp, kp, np_ = _ceil_to(ma, bm_), _ceil_to(ka, bk_), _ceil_to(na, bn_)
-    pads = {"nn": ((mp, kp), (kp, np_)),
-            "nt": ((mp, kp), (np_, kp)),
-            "tn": ((kp, mp), (kp, np_))}[layout]
-    (ar, ac), (br, bc) = pads
-    a_pad = _pad_axis(_pad_axis(a_payload, 0, ar), 1, ac)
-    b_pad = _pad_axis(_pad_axis(b_payload, 0, br), 1, bc)
+    a_pad, b_pad, bm_, bk_, bn_, m, n = _gemm_pad_plan(
+        layout, a_payload, b_payload, bm, bk, bn, axis0=0)
     oa, ob = (None, None) if epilogue_stats is None else epilogue_stats
     out = s2fp8_matmul_pallas(a_pad, jnp.asarray(a_alpha, jnp.float32),
                               jnp.asarray(a_beta, jnp.float32),
@@ -227,3 +241,31 @@ def qmatmul_nd(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta, *,
                               oa, ob, layout=layout, fmt=fmt,
                               bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
     return out[:m, :n]
+
+
+def qmatmul_batched_nd(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
+                       *, layout: str = "nn", out_batch: Optional[int] = None,
+                       epilogue_stats=None, fmt: str = "e5m2",
+                       bm: Optional[int] = None, bk: Optional[int] = None,
+                       bn: Optional[int] = None,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """C[Go,M,N] = batched dequant-GEMM under ``layout``, arbitrary M/K/N.
+
+    The leading batch axes need no padding (block batch size is 1); the
+    trailing two dims of each operand get the same per-layout tile
+    alignment + block-grid zero-padding as :func:`qmatmul_nd`
+    (``_gemm_pad_plan``; exact for S2FP8).  Broadcast (``Ga``/``Gb``
+    dividing the combined batch) and ``out_batch`` reduction semantics
+    live in ``s2fp8_matmul_batched_pallas``.
+    """
+    a_pad, b_pad, bm_, bk_, bn_, m, n = _gemm_pad_plan(
+        layout, a_payload, b_payload, bm, bk, bn, axis0=1)
+    oa, ob = (None, None) if epilogue_stats is None else epilogue_stats
+    out = s2fp8_matmul_batched_pallas(
+        a_pad, jnp.asarray(a_alpha, jnp.float32),
+        jnp.asarray(a_beta, jnp.float32),
+        b_pad, jnp.asarray(b_alpha, jnp.float32),
+        jnp.asarray(b_beta, jnp.float32),
+        oa, ob, layout=layout, out_batch=out_batch, fmt=fmt,
+        bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+    return out[:, :m, :n]

@@ -86,6 +86,54 @@ def s2fp8_matmul_ref(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
     return y
 
 
+# Batched variants: one leading batch axis on both operands, per-slice
+# contraction per GEMM_CONTRACT, dot_general batch dims (0, 0).
+GEMM_CONTRACT_BATCHED = {
+    "nn": (((2,), (1,)), ((0,), (0,))),
+    "nt": (((2,), (2,)), ((0,), (0,))),
+    "tn": (((1,), (1,)), ((0,), (0,))),
+}
+
+
+def _expand_batch(x, g: int):
+    """[Gx, ...] -> [G, ...] where slice ``g_i`` is ``x[g_i % Gx]`` — the
+    trailing-aligned broadcast of the batched payload GEMM."""
+    gx = x.shape[0]
+    if gx == g:
+        return x
+    return jnp.broadcast_to(x[None], (g // gx,) + x.shape
+                            ).reshape((g,) + x.shape[1:])
+
+
+def s2fp8_matmul_batched_ref(a_payload, a_alpha, a_beta,
+                             b_payload, b_alpha, b_beta,
+                             out_alpha=None, out_beta=None, *,
+                             layout: str = "nn", out_batch=None,
+                             fmt: str = "e5m2"):
+    """Batched dequant-GEMM oracle: ``a [Ga, ., .] x b [Gb, ., .]`` over
+    combined batch ``G = max(Ga, Gb)`` (operand slice for step ``g`` is
+    ``g % Gx``); ``out_batch < G`` sums groups of ``G // out_batch``
+    (``g // out_batch`` constant within a group) — the broadcast-operand
+    gradient reduction.  Per-slice layout semantics match
+    :func:`s2fp8_matmul_ref`."""
+    g = max(a_payload.shape[0], b_payload.shape[0])
+    if g % a_payload.shape[0] or g % b_payload.shape[0]:
+        raise ValueError(f"batch sizes {a_payload.shape[0]} / "
+                         f"{b_payload.shape[0]} do not divide evenly")
+    go = g if out_batch is None else out_batch
+    if g % go:
+        raise ValueError(f"out_batch {go} does not divide batch {g}")
+    a = _expand_batch(s2fp8_dequant_ref(a_payload, a_alpha, a_beta), g)
+    b = _expand_batch(s2fp8_dequant_ref(b_payload, b_alpha, b_beta), g)
+    y = jax.lax.dot_general(a, b, GEMM_CONTRACT_BATCHED[layout],
+                            preferred_element_type=jnp.float32)
+    if go != g:
+        y = y.reshape((g // go, go) + y.shape[1:]).sum(axis=0)
+    if out_alpha is not None:
+        y = s2fp8_truncate_ref(y, stats=(out_alpha, out_beta), fmt=fmt)
+    return y
+
+
 # --------------------------------------------------------------------------
 # selective_scan (Mamba-1 recurrence)
 # --------------------------------------------------------------------------

@@ -85,6 +85,57 @@ def _operand_specs(layout, bm, bk, bn):
 
 
 # ---------------------------------------------------------------------------
+# batched variant: third (leading) data axis, broadcast/reduce via index maps
+# ---------------------------------------------------------------------------
+
+def _batched_matmul_kernel(aa_ref, ab_ref, ba_ref, bb_ref, oa_ref, ob_ref,
+                           a_ref, b_ref, o_ref, *, layout, epilogue, fmt):
+    gr = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(gr == 0, k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = _dequant(a_ref[...][0], aa_ref[0, 0], ab_ref[0, 0])
+    b = _dequant(b_ref[...][0], ba_ref[0, 0], bb_ref[0, 0])
+    o_ref[...] += jax.lax.dot_general(a, b, GEMM_CONTRACT[layout],
+                                      preferred_element_type=jnp.float32
+                                      )[None]
+    if epilogue:
+        @pl.when(jnp.logical_and(gr == pl.num_programs(3) - 1,
+                                 k == pl.num_programs(4) - 1))
+        def _epilogue():
+            o_ref[...] = _truncate_body(o_ref[...], oa_ref[0, 0],
+                                        ob_ref[0, 0], fmt)
+
+
+def _batched_operand_specs(layout, bm, bk, bn, go, ga, gb):
+    """Batched BlockSpecs: the per-slice index maps of ``_operand_specs``
+    plus a leading batch coordinate.  Grid axes are (g_out, i, j, g_red,
+    kk); the combined batch step is ``g = g_red * go + g_out`` and each
+    operand contributes its slice ``g % Gx`` (``Gx < G``: the
+    trailing-aligned broadcast; block batch size is 1, so block index ==
+    slice index)."""
+    def amap(two_d):
+        return lambda g, i, j, gr, kk: ((gr * go + g) % ga,) + two_d(i, kk)
+
+    def bmap(two_d):
+        return lambda g, i, j, gr, kk: ((gr * go + g) % gb,) + two_d(kk, j)
+
+    if layout == "nn":
+        a_spec = pl.BlockSpec((1, bm, bk), amap(lambda i, kk: (i, kk)))
+        b_spec = pl.BlockSpec((1, bk, bn), bmap(lambda kk, j: (kk, j)))
+    elif layout == "nt":
+        a_spec = pl.BlockSpec((1, bm, bk), amap(lambda i, kk: (i, kk)))
+        b_spec = pl.BlockSpec((1, bn, bk), bmap(lambda kk, j: (j, kk)))
+    else:  # tn
+        a_spec = pl.BlockSpec((1, bk, bm), amap(lambda i, kk: (kk, i)))
+        b_spec = pl.BlockSpec((1, bk, bn), bmap(lambda kk, j: (kk, j)))
+    return a_spec, b_spec
+
+
+# ---------------------------------------------------------------------------
 # block-size heuristic
 # ---------------------------------------------------------------------------
 
@@ -164,6 +215,59 @@ def s2fp8_matmul_pallas(a_payload, a_alpha, a_beta, b_payload, b_alpha, b_beta,
         in_specs=[scalar] * 6 + [a_spec, b_spec],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(a_alpha, jnp.float32).reshape(1, 1),
+      jnp.asarray(a_beta, jnp.float32).reshape(1, 1),
+      jnp.asarray(b_alpha, jnp.float32).reshape(1, 1),
+      jnp.asarray(b_beta, jnp.float32).reshape(1, 1),
+      jnp.asarray(oa, jnp.float32).reshape(1, 1),
+      jnp.asarray(ob, jnp.float32).reshape(1, 1),
+      a_payload, b_payload)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "out_batch", "fmt",
+                                             "bm", "bk", "bn", "interpret"))
+def s2fp8_matmul_batched_pallas(a_payload, a_alpha, a_beta,
+                                b_payload, b_alpha, b_beta,
+                                out_alpha=None, out_beta=None, *,
+                                layout: str = "nn", out_batch=None,
+                                fmt: str = "e5m2", bm=256, bk=256, bn=256,
+                                interpret: bool | None = None):
+    """Batched payload GEMM: ``C[Go,M,N]`` from ``A[Ga,.,.] x B[Gb,.,.]``.
+
+    The combined batch is ``G = max(Ga, Gb)``; an operand's slice for
+    combined step ``g`` is ``g % Gx`` (trailing-aligned broadcast — the
+    ``becd,edf`` weight reuse), and ``out_batch < G`` accumulates the
+    ``G // out_batch`` broadcast groups into one output slice (the
+    broadcast operand's gradient).  Grid is (g_out, M/bm, N/bn, g_red,
+    K/bk) with the two reduction axes innermost, so each output tile
+    stays resident in VMEM across its whole reduction (revisit
+    accumulation) and the Eq. 5 epilogue still runs on the finished tile
+    before it ever crosses HBM.  Per-slice layout/epilogue semantics
+    match :func:`s2fp8_matmul_pallas`; trailing dims must be
+    block-divisible (padded one layer up in ``dispatch``)."""
+    interpret = auto_interpret() if interpret is None else interpret
+    ga, gb = a_payload.shape[0], b_payload.shape[0]
+    g = max(ga, gb)
+    assert g % ga == 0 and g % gb == 0, (ga, gb)
+    go = g if out_batch is None else out_batch
+    assert g % go == 0, (g, go)
+    m, k, n = gemm_dims(layout, a_payload.shape[1:], b_payload.shape[1:])
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (go, m // bm, n // bn, g // go, k // bk)
+    epilogue = out_alpha is not None
+    oa = out_alpha if epilogue else 1.0
+    ob = out_beta if epilogue else 0.0
+    scalar = pl.BlockSpec((1, 1), lambda gi, i, j, gr, kk: (0, 0))
+    a_spec, b_spec = _batched_operand_specs(layout, bm, bk, bn, go, ga, gb)
+    return pl.pallas_call(
+        functools.partial(_batched_matmul_kernel, layout=layout,
+                          epilogue=epilogue, fmt=fmt),
+        grid=grid,
+        in_specs=[scalar] * 6 + [a_spec, b_spec],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, gr, kk: (gi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((go, m, n), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(a_alpha, jnp.float32).reshape(1, 1),
       jnp.asarray(a_beta, jnp.float32).reshape(1, 1),

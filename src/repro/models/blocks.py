@@ -97,14 +97,23 @@ def _grouped(q, kv_heads):
     return q.reshape(b, kv_heads, h // kv_heads, s, d)
 
 
+def _attn_einsum(policy: Optional[Policy], spec: str, a, b):
+    """Attention contraction through the numeric policy: both attention
+    GEMMs (scores QKᵀ and the value product) are ``policy.einsum`` calls,
+    so under s2fp8 they get the paper's full "before and after every
+    matrix-matrix product" dataflow — and on the payload path they route
+    through the batched payload-domain kernel (core/qdot.py) like every
+    other bilinear op.  Softmax math stays f32 in the caller."""
+    if policy is None:
+        return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+    return policy.einsum(spec, a, b).astype(jnp.float32)
+
+
 def full_attention(q, k, v, *, causal=True, window=None, policy: Policy = None):
     """q: [B,KV,G,Sq,d]; k,v: [B,KV,Sk,d]. Plain masked softmax attention."""
     d = q.shape[-1]
     sq, sk = q.shape[3], k.shape[2]
-    if policy is not None:
-        q, k, v = policy.truncate(q), policy.truncate(k), policy.truncate(v)
-    logits = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(jnp.float32),
-                        k.astype(jnp.float32)) / math.sqrt(d)
+    logits = _attn_einsum(policy, "bkgqd,bksd->bkgqs", q, k) / math.sqrt(d)
     qpos = jnp.arange(sq)[:, None] + (sk - sq)
     kpos = jnp.arange(sk)[None, :]
     mask = jnp.ones((sq, sk), bool)
@@ -114,11 +123,8 @@ def full_attention(q, k, v, *, causal=True, window=None, policy: Policy = None):
         mask &= kpos > qpos - window
     logits = jnp.where(mask[None, None, None], logits, _MASK)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v.astype(jnp.float32))
-    out = out.astype(q.dtype)
-    if policy is not None:
-        out = policy.truncate(out)
-    return out
+    out = _attn_einsum(policy, "bkgqs,bksd->bkgqd", probs, v)
+    return out.astype(q.dtype)
 
 
 def chunked_attention(q, k, v, *, causal=True, window=None,
@@ -191,17 +197,11 @@ def decode_attention(q, k_cache, v_cache, valid, *, policy: Policy = None):
     softmax reductions then lower to partial-softmax collectives under GSPMD.
     """
     d = q.shape[-1]
-    if policy is not None:
-        q = policy.truncate(q)
-    logits = jnp.einsum("bkgqd,bksd->bkgqs", q.astype(jnp.float32),
-                        k_cache.astype(jnp.float32)) / math.sqrt(d)
+    logits = _attn_einsum(policy, "bkgqd,bksd->bkgqs", q, k_cache) / math.sqrt(d)
     logits = jnp.where(valid[None, None, None, None], logits, _MASK)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v_cache.astype(jnp.float32))
-    out = out.astype(q.dtype)
-    if policy is not None:
-        out = policy.truncate(out)
-    return out
+    out = _attn_einsum(policy, "bkgqs,bksd->bkgqd", probs, v_cache)
+    return out.astype(q.dtype)
 
 
 # =========================================================================

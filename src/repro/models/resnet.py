@@ -12,6 +12,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import statsbank
 from repro.core.policy import Policy
 
 
@@ -69,9 +70,15 @@ def init_resnet(key, depth: int = 20, n_classes: int = 10, width: int = 16):
 
 
 def resnet_apply(params, state, x, pol: Policy, train: bool):
-    """x: [B, 32, 32, 3].  Returns (logits, new_state)."""
+    """x: [B, 32, 32, 3].  Returns (logits, new_state).
+
+    Conv truncation sites are named via StatsBank scopes ("stem",
+    "block{i}", "head") so banked runs — including the payload-domain
+    conv lowering, where each conv is one GEMM bank node — get stable,
+    readable per-layer keys."""
     new_state = {"bns": []}
-    h = pol.conv(x, params["stem"])
+    with statsbank.scope("stem"):
+        h = pol.conv(x, params["stem"])
     h, new_state["stem_bn"] = batch_norm(params["stem_bn"], state["stem_bn"], h, train)
     h = jax.nn.relu(h)
     n = len(params["blocks"]) // 3
@@ -82,18 +89,20 @@ def resnet_apply(params, state, x, pol: Policy, train: bool):
         y, bs1 = batch_norm(block["bn1"], bst["bn1"], h, train)
         y = jax.nn.relu(y)
         shortcut = h
-        if "proj" in block:
-            shortcut = pol.conv(y, block["proj"], stride=(stride, stride))
-        y = pol.conv(y, block["conv1"], stride=(stride, stride))
-        y, bs2 = batch_norm(block["bn2"], bst["bn2"], y, train)
-        y = jax.nn.relu(y)
-        y = pol.conv(y, block["conv2"])
+        with statsbank.scope(f"block{i}"):
+            if "proj" in block:
+                shortcut = pol.conv(y, block["proj"], stride=(stride, stride))
+            y = pol.conv(y, block["conv1"], stride=(stride, stride))
+            y, bs2 = batch_norm(block["bn2"], bst["bn2"], y, train)
+            y = jax.nn.relu(y)
+            y = pol.conv(y, block["conv2"])
         h = shortcut + y
         new_state["bns"].append({"bn1": bs1, "bn2": bs2})
     h, new_state["final_bn"] = batch_norm(params["final_bn"], state["final_bn"], h, train)
     h = jax.nn.relu(h)
     h = jnp.mean(h, axis=(1, 2))
-    return pol.dot(h, params["fc"]), new_state
+    with statsbank.scope("head"):
+        return pol.dot(h, params["fc"]), new_state
 
 
 def loss_fn(params, state, batch, pol: Policy, train: bool = True):

@@ -23,7 +23,8 @@ from repro.core import backend as nbackend
 from repro.core import qdot
 from repro.core import s2fp8
 from repro.core import statsbank
-from repro.core.policy import _einsum_is_matmul, make_policy
+from repro.core.backend import plan_einsum
+from repro.core.policy import make_policy
 from repro.core.s2fp8 import S2FP8Tensor
 from repro.kernels import dispatch
 from repro.kernels.ref import gemm_dims
@@ -411,28 +412,36 @@ def test_policy_gemm_mode_routing():
     from repro.core.policy import Policy
     assert not Policy(mode="s2fp8", gemm_mode="auto",
                       truncate_output=False).uses_payload_gemm
-    assert not Policy(mode="s2fp8", gemm_mode="auto", backend="pallas",
-                      output_dtype="bfloat16").uses_payload_gemm
+    # the bf16 GEMM-boundary lever no longer forces fig4: the payload
+    # return rounds through accum_dtype at the boundary instead
+    assert Policy(mode="s2fp8", gemm_mode="auto", backend="pallas",
+                  output_dtype="bfloat16").uses_payload_gemm
     # explicit payload requests incompatible with the fused epilogue are
     # rejected, not silently downgraded
     with pytest.raises(ValueError):
         Policy(mode="s2fp8", gemm_mode="payload", truncate_output=False)
     with pytest.raises(ValueError):
-        Policy(mode="s2fp8", gemm_mode="payload", output_dtype="bfloat16")
-    with pytest.raises(ValueError):
         Policy(mode="s2fp8", gemm_mode="tiled")
 
 
-def test_einsum_matmul_matcher():
-    assert _einsum_is_matmul("bsd,df->bsf")
-    assert _einsum_is_matmul("md,df->mf")
-    assert _einsum_is_matmul("...d,df->...f")           # ellipsis batch
-    assert not _einsum_is_matmul("ecd,edf->ecf")        # batched
-    assert not _einsum_is_matmul("bhqd,bhkd->bhqk")     # attention
-    assert not _einsum_is_matmul("bsd,d->bs")           # 1-D rhs
-    assert not _einsum_is_matmul("dd,df->df")           # repeated index
-    assert not _einsum_is_matmul("...d,...df->...f")    # ellipsis rhs
-    assert not _einsum_is_matmul("...d,df->f")          # dropped batch
+def test_einsum_planner_routing():
+    """The PR-3 whitelist is gone: Policy.einsum routes through the
+    backend planner.  The dense family still plans 2-D; the previously
+    rejected batched/attention specs now plan batched (covered in depth
+    by tests/test_qdot_batched.py); genuinely unplannable specs fall
+    back to the Fig. 4 chain."""
+    dense = plan_einsum("bsd,df->bsf", (2, 6, 16), (16, 8))
+    assert dense is not None and dense.batch == 1
+    assert plan_einsum("md,df->mf", (4, 16), (16, 8)) is not None
+    assert plan_einsum("...d,df->...f", (2, 6, 16), (16, 8)) == dense
+    assert plan_einsum("ecd,edf->ecf", (2, 4, 16), (2, 16, 8)).batch == 2
+    assert plan_einsum("bhqd,bhkd->bhqk",
+                       (2, 3, 4, 16), (2, 3, 5, 16)).layout == "nt"
+    assert plan_einsum("dd,df->df", (4, 4), (4, 8)) is None   # repeated idx
+    assert plan_einsum("...d,...df->...f",
+                       (2, 6, 16), (2, 16, 8)) is None        # ellipsis rhs
+    assert plan_einsum("...d,df->f", (2, 6, 16), (16, 8)) is None  # dropped
+    assert plan_einsum("abc,abc->a", (2, 3, 4), (2, 3, 4)) is None  # multi-k
     # routed einsum == routed dot, explicit and ellipsis forms
     pol = make_policy("s2fp8", backend="ref", gemm_mode="payload")
     a = jax.random.normal(jax.random.PRNGKey(15), (2, 6, 16)) * 1e-6
@@ -475,18 +484,19 @@ def test_operand_stats_rederives_per_fmt():
 
 
 def test_qdot_general_plan_and_execution():
-    assert nbackend.plan_qdot_general((4, 8), (8, 5),
-                                      (((1,), (0,)), ((), ()))) == \
-        ("nn", (4, 8), (8, 5), (4, 5))
+    plan = nbackend.plan_qdot_general((4, 8), (8, 5), (((1,), (0,)), ((), ())))
+    assert (plan.layout, plan.a2_shape, plan.b2_shape, plan.out_shape) == \
+        ("nn", (4, 8), (8, 5), (4, 5)) and plan.batch == 1
     assert nbackend.plan_qdot_general((4, 8), (5, 8),
                                       (((1,), (1,)), ((), ())))[0] == "nt"
     assert nbackend.plan_qdot_general((8, 4), (8, 5),
                                       (((0,), (0,)), ((), ())))[0] == "tn"
-    # unsupported: tt, batch dims, multi-contraction
+    # unsupported: tt, multi-contraction; batch dims now PLAN (batched)
     assert nbackend.plan_qdot_general((8, 4), (5, 8),
                                       (((0,), (1,)), ((), ()))) is None
-    assert nbackend.plan_qdot_general((2, 4, 8), (2, 8, 5),
-                                      (((2,), (1,)), ((0,), (0,)))) is None
+    bplan = nbackend.plan_qdot_general((2, 4, 8), (2, 8, 5),
+                                       (((2,), (1,)), ((0,), (0,))))
+    assert bplan is not None and bplan.batch == 2 and bplan.layout == "nn"
     be = nbackend.get_backend("ref")
     a = jax.random.normal(jax.random.PRNGKey(17), (3, 4, 16)) * 1e-4
     b = jax.random.normal(jax.random.PRNGKey(18), (16, 6)) * 1e-4
