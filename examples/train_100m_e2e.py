@@ -3,32 +3,30 @@ S2FP8, checkpointing + auto-resume, on whatever devices exist.
 
     PYTHONPATH=src python examples/train_100m_e2e.py --steps 300
 
+Mesh-native (ISSUE 5): ``--mesh host`` runs the shard_map train step over
+every visible device (batch data-parallel, grads synced per
+``--grad-sync``); ``--host-devices 8`` forces an 8-way CPU host platform
+for smoke runs.  Checkpoints gather sharded leaves to host, so a run
+checkpointed on 8 devices resumes on 1 (and vice versa):
+
+    # 8-way sharded run, compressed grad sync, checkpoint every 100 steps
+    # (--batch must divide the data-axis size or the batch silently
+    # replicates — the driver warns)
+    PYTHONPATH=src python examples/train_100m_e2e.py --steps 200 --batch 8 \
+        --host-devices 8 --mesh host --grad-sync s2fp8
+    # resume the SAME checkpoint single-device
+    PYTHONPATH=src python examples/train_100m_e2e.py --steps 300 --batch 8 \
+        --host-devices 1 --mesh none
+
 This is the deliverable-(b) driver: full stack (config -> model -> policy ->
 optimizer/schedule -> data pipeline -> TrainLoop with watchdog/checkpoints).
 """
 import argparse
 import math
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.checkpoint.manager import CheckpointManager
-from repro.core.policy import make_policy
-from repro.data import synthetic
-from repro.models import transformer as tlm
-from repro.optim import optimizers, schedules
-from repro.training.trainer import TrainLoop, make_train_step
-
-CFG = ArchConfig(
-    name="lm-134m", family="dense",
-    n_layers=12, d_model=768, n_heads=12, kv_heads=4, d_ff=2048,
-    vocab=32_000, head_dim=64, activation="silu_glu", tie_embeddings=True,
-    remat=False, attn_impl="flash",
-)
+import os
 
 
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=4)
@@ -36,10 +34,69 @@ def main():
     ap.add_argument("--policy", default="s2fp8")
     ap.add_argument("--ckpt-dir", default="/tmp/ckpt_100m")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--mesh", default="host",
+                    help="'host' (all devices on the data axis), a 'DxT' "
+                         "spec like '8x1', or 'none' for the meshless step")
+    ap.add_argument("--grad-sync", default="f32", choices=["f32", "s2fp8"],
+                    help="cross-shard gradient sync: plain f32 psum or the "
+                         "S2FP8-compressed reduce-scatter/all-gather")
+    ap.add_argument("--stats-refresh-every", type=int, default=16,
+                    help="StatsBank refresh cadence for s2fp8 policies "
+                         "(0 = exact stats every truncation)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host-platform devices (CPU smoke runs); "
+                         "must be set before jax initializes")
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={args.host_devices}"
+
+    # late imports: --host-devices must land in XLA_FLAGS before jax
+    # touches the backend (device count locks on first init)
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import statsbank
+    from repro.core.policy import make_policy
+    from repro.data import synthetic
+    from repro.launch.mesh import make_host_mesh, make_mesh_from_spec
+    from repro.models import transformer as tlm
+    from repro.optim import optimizers, schedules
+    from repro.training.trainer import TrainLoop, make_train_step
+
+    CFG = ArchConfig(
+        name="lm-134m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, kv_heads=4, d_ff=2048,
+        vocab=32_000, head_dim=64, activation="silu_glu", tie_embeddings=True,
+        remat=False, attn_impl="flash",
+    )
+
+    if args.mesh == "none":
+        mesh = None
+    elif args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_mesh_from_spec(args.mesh)
+
+    if mesh is not None:
+        from repro.parallel import sharding as shd
+        n_shards = shd.mesh_batch_size(mesh)
+        if args.batch % n_shards != 0:
+            print(f"[e2e] WARNING: --batch {args.batch} does not divide "
+                  f"the {n_shards}-way data axis — the batch will be "
+                  f"REPLICATED (every device computes the full batch)")
 
     n_params = CFG.n_params()
-    print(f"[e2e] {CFG.name}: {n_params/1e6:.0f}M params, policy={args.policy}")
+    print(f"[e2e] {CFG.name}: {n_params/1e6:.0f}M params, "
+          f"policy={args.policy}, devices={len(jax.devices())}, "
+          f"mesh={'none' if mesh is None else dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"grad-sync={args.grad_sync}")
 
     pol = make_policy(args.policy)
     params = tlm.init_lm(CFG, jax.random.PRNGKey(args.seed))
@@ -49,16 +106,30 @@ def main():
     def loss_fn(p, batch, pol_):
         return tlm.loss_fn(p, batch["tokens"], batch["labels"], CFG, pol_)
 
-    step_fn = make_train_step(loss_fn, opt, sched, pol, track_stats=False)
+    stats_cfg = None
+    bank = None
     table = synthetic.make_markov_table(args.seed, CFG.vocab)
 
     def data_fn(s):
         return synthetic.lm_batch(args.seed, s, args.batch, args.seq,
                                   CFG.vocab, table)
 
+    if args.policy in ("s2fp8", "s2fp8_e4m3") and args.stats_refresh_every:
+        stats_cfg = statsbank.StatsConfig(
+            refresh_every=args.stats_refresh_every)
+        bank = statsbank.init_bank(loss_fn, params, data_fn(0), pol,
+                                   stats_cfg)
+        print(f"[e2e] statsbank: {len(bank)} sites, refresh every "
+              f"{stats_cfg.refresh_every} steps"
+              + (" (global under the mesh)" if mesh is not None else ""))
+
+    step_fn = make_train_step(loss_fn, opt, sched, pol, stats=stats_cfg,
+                              mesh=mesh, grad_sync_mode=args.grad_sync)
+
     ck = CheckpointManager(args.ckpt_dir, keep=2)
     loop = TrainLoop(step_fn, params, opt.init(params), data_fn,
-                     ckpt_manager=ck, ckpt_every=100, log_every=10)
+                     ckpt_manager=ck, ckpt_every=100, log_every=10,
+                     stats_bank=bank)
     loop.maybe_resume()
     hist = loop.run(args.steps)
     first = hist[0]["loss"] if loop.start_step == 0 else float("nan")

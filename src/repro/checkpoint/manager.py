@@ -7,8 +7,13 @@ Design (scales to multi-host; exercised single-host here):
     COMPLETE step (rename is the commit point).
   * sharded: each leaf is its own ``.npy``; on a pod each process writes its
     addressable shards (process-id suffix slot is in the filename schema).
-  * logical arrays: leaves are saved unsharded (gathered), so a checkpoint
-    restores onto ANY mesh shape — this is the elastic-rescale path.
+  * logical arrays: leaves are saved unsharded (``jax.device_get``
+    assembles fully-addressable sharded arrays on the host), so a
+    checkpoint restores onto ANY mesh shape — this is the elastic-rescale
+    path: a carry saved from an 8-device mesh-native train step restores
+    bit-exact on a single device (and vice versa; tests/test_mesh_train.py
+    round-trips exactly that).  Restored leaves are host numpy; the next
+    jitted step lays them out per its own sharding specs.
   * S2FP8 compression (beyond-paper, core/s2fp8.py): optional 1-byte payload
     + (alpha, beta) per tensor for non-master state, ~4x smaller checkpoints.
   * retention: keep the latest ``keep`` checkpoints; GC is also atomic.
@@ -47,9 +52,13 @@ class CheckpointManager:
         return os.path.join(self.dir, f"step_{step:010d}")
 
     def save(self, step: int, tree: Any, blocking: bool = True):
-        # Snapshot to host memory first (cheap on CPU; device_get on TPU).
+        # Snapshot to host memory first: device_get assembles sharded
+        # leaves (fully-addressable single-host meshes) into one logical
+        # array each, so what hits disk is mesh-shape-agnostic.
         leaves, treedef = _flatten(tree)
-        host_leaves = [np.asarray(x) for x in leaves]
+        # one batched device_get: D2H transfers for all leaves overlap
+        # instead of serializing leaf-by-leaf
+        host_leaves = [np.asarray(x) for x in jax.device_get(leaves)]
         if self._writer is not None:
             self._writer.join()          # backpressure: one in-flight write
             self._writer = None

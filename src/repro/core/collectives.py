@@ -14,14 +14,30 @@ therefore split the all-reduce into its two data-movement-asymmetric legs:
 
 ICI bytes per element: f32 all-reduce ~ 2*(n-1)/n * 4B; compressed version
 ~ (n-1)/n * (2B + 1B) — a ~2.7x traffic cut with the paper's own format
-carrying the gather leg.  Implemented with shard_map + lax collectives so
-the schedule is explicit and inspectable in HLO (tests/test_collectives.py
-verifies numerics; the dry-run roofline counts the bytes).
+carrying the gather leg.
+
+Two API levels:
+
+  * **axis level** (``grad_sync_axis`` / ``compressed_allreduce_axis``) —
+    plain functions over ``lax`` collectives that run INSIDE an existing
+    ``shard_map`` body.  This is what the mesh-native train step
+    (training/trainer.py ``make_train_step(mesh=...)``) composes: the
+    gradient pytree is synced leaf-by-leaf with a per-leaf routing
+    decision (:func:`leaf_sync_route`) — small, integer, 0-d or
+    non-divisible leaves bypass compression through a plain ``psum``.
+  * **mesh level** (``compressed_grad_sync`` / ``compressed_allreduce_1d``)
+    — self-contained wrappers that build their own ``shard_map`` over a
+    replicated input; kept for standalone callers and as the numerics
+    test surface (tests/test_collectives.py).
+
+The schedule is explicit ``lax`` collectives so it is inspectable in HLO;
+the dry-run roofline counts the bytes (see also ``modeled_ici_bytes`` in
+benchmarks/kernel_bench.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +46,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import backend as nbackend
 from repro.core.s2fp8 import S2FP8Tensor
+
+AxisName = Union[str, Tuple[str, ...]]
 
 
 def _encode_local(x: jnp.ndarray, backend: Optional[str] = None
@@ -50,29 +68,130 @@ def _decode_local(payload, alpha, beta, backend: Optional[str] = None
         S2FP8Tensor(payload=payload, alpha=alpha, beta=beta))
 
 
+# ---------------------------------------------------------------------------
+# per-leaf routing
+# ---------------------------------------------------------------------------
+
+def leaf_sync_route(shape: Sequence[int], dtype, axis_size: int,
+                    min_size: int = 1 << 16) -> str:
+    """Routing decision for one gradient leaf: ``"compressed"`` (S2FP8
+    all-gather leg) or ``"plain"`` (f32 psum).  Pure function of the
+    leaf's static shape/dtype, so the decision is trace-free and
+    unit-testable (tests/test_mesh_train.py).
+
+    A leaf bypasses compression when any of:
+
+      * non-float dtype — integer/bool leaves (step counters, masks) have
+        no log2 image; summation must stay exact;
+      * 0-d scalar — nothing to scatter, and the 8-byte stats would
+        outweigh the payload;
+      * fewer than ``min_size`` elements — below ~64k the per-tensor
+        stats reduction and kernel launches dominate the 3-byte/elt win;
+      * length not divisible by ``axis_size`` — the tiled
+        psum_scatter/all_gather legs need equal shards (padding a grad
+        leaf would perturb its stats).
+    """
+    size = 1
+    for d in shape:
+        size *= d
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return "plain"
+    if len(shape) == 0:
+        return "plain"
+    if size < min_size:
+        return "plain"
+    if size % axis_size != 0:
+        return "plain"
+    return "compressed"
+
+
+# ---------------------------------------------------------------------------
+# axis level: composable inside an existing shard_map body
+# ---------------------------------------------------------------------------
+
+def compressed_allreduce_axis(flat: jnp.ndarray, axis_name: str,
+                              axis_size: int,
+                              backend: Optional[str] = None) -> jnp.ndarray:
+    """SUM-all-reduce a 1-D f32 leaf across a mapped axis with the
+    S2FP8-compressed all-gather leg.  Must run inside a ``shard_map`` (or
+    other mapped context) where ``axis_name`` is bound; ``flat`` is the
+    local value (len % axis_size == 0).  ``backend`` selects the numerics
+    engine for the encode/decode legs (None/"auto": platform default —
+    fused Pallas kernels on TPU, ref jnp elsewhere)."""
+    red = jax.lax.psum_scatter(flat.astype(jnp.bfloat16), axis_name,
+                               scatter_dimension=0, tiled=True)
+    payload, alpha, beta = _encode_local(red.astype(jnp.float32), backend)
+    payloads = jax.lax.all_gather(payload, axis_name, tiled=True)
+    alphas = jax.lax.all_gather(alpha[None], axis_name)
+    betas = jax.lax.all_gather(beta[None], axis_name)
+    chunks = payloads.reshape(axis_size, flat.shape[0] // axis_size)
+    dec = jax.vmap(functools.partial(_decode_local, backend=backend))(
+        chunks, alphas[:, 0], betas[:, 0])
+    return dec.reshape(-1)
+
+
+def grad_sync_axis(grads, axis_name: AxisName, axis_sizes: Dict[str, int],
+                   *, mode: str = "s2fp8", min_size: int = 1 << 16,
+                   backend: Optional[str] = None):
+    """SUM-reduce a gradient pytree across mapped mesh axes, inside an
+    existing ``shard_map`` body.
+
+    This is the mesh-native train step's gradient synchronizer: the step
+    scales its local loss by ``1 / global_batch_shards`` before
+    differentiation, so the per-shard gradients are *contributions* to the
+    global mean and the sync is a pure sum (no trailing division — the
+    1-device and N-device backward pipelines then see identical
+    per-element cotangent values).
+
+    * ``mode="f32"``  — every leaf is a plain ``psum`` (float leaves
+      promoted to f32 for the wire, cast back after).
+    * ``mode="s2fp8"`` — leaves routed per :func:`leaf_sync_route`:
+      compressible leaves take the bf16-reduce-scatter + S2FP8-all-gather
+      legs, the rest fall back to plain psum.
+
+    ``axis_name`` may be a tuple (e.g. ``("pod", "data")``): the
+    compressed legs run over the LAST axis (the largest, innermost data
+    axis by the mesh conventions in launch/mesh.py) and a plain f32 psum
+    folds the leading axes first.
+    """
+    if mode not in ("f32", "s2fp8"):
+        raise ValueError(f"grad_sync mode must be 'f32' or 's2fp8', "
+                         f"got {mode!r}")
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    inner = axes[-1]
+
+    def plain(g):
+        if jnp.issubdtype(g.dtype, jnp.floating):
+            return jax.lax.psum(g.astype(jnp.float32), axes).astype(g.dtype)
+        return jax.lax.psum(g, axes)
+
+    def sync(g):
+        if mode == "f32" or leaf_sync_route(
+                g.shape, g.dtype, axis_sizes[inner], min_size) == "plain":
+            return plain(g)
+        flat = g.reshape(-1).astype(jnp.float32)
+        if len(axes) > 1:
+            flat = jax.lax.psum(flat, axes[:-1])
+        out = compressed_allreduce_axis(flat, inner, axis_sizes[inner],
+                                        backend)
+        return out.reshape(g.shape).astype(g.dtype)
+
+    return jax.tree_util.tree_map(sync, grads)
+
+
+# ---------------------------------------------------------------------------
+# mesh level: self-contained wrappers over replicated inputs
+# ---------------------------------------------------------------------------
+
 def compressed_allreduce_1d(g: jnp.ndarray, mesh: Mesh, axis: str = "data",
                             backend: Optional[str] = None):
     """All-reduce a replicated-per-shard gradient across ``axis`` with an
     S2FP8-compressed all-gather leg.  g must be 1-D with len % axis_size == 0
-    (caller flattens/pads; see ``compressed_grad_sync``).  ``backend``
-    selects the numerics engine for the encode/decode legs (None/"auto":
-    platform default — fused Pallas kernels on TPU, ref jnp elsewhere)."""
+    (caller flattens/pads; see ``compressed_grad_sync``).  Builds its own
+    ``shard_map``; the body is :func:`compressed_allreduce_axis`."""
     n = mesh.shape[axis]
-
-    def body(gl):
-        # gl: the local copy [L]. reduce_scatter in bf16.
-        red = jax.lax.psum_scatter(gl.astype(jnp.bfloat16), axis,
-                                   scatter_dimension=0, tiled=True)
-        payload, alpha, beta = _encode_local(red.astype(jnp.float32), backend)
-        payloads = jax.lax.all_gather(payload, axis, tiled=True)
-        alphas = jax.lax.all_gather(alpha[None], axis)
-        betas = jax.lax.all_gather(beta[None], axis)
-        shard_len = gl.shape[0] // n
-        chunks = payloads.reshape(n, shard_len)
-        dec = jax.vmap(functools.partial(_decode_local, backend=backend))(
-            chunks, alphas[:, 0], betas[:, 0])
-        return dec.reshape(-1)
-
+    body = functools.partial(compressed_allreduce_axis, axis_name=axis,
+                             axis_size=n, backend=backend)
     return shard_map(body, mesh=mesh,
                      in_specs=P(), out_specs=P(), check_rep=False)(g)
 
@@ -80,19 +199,31 @@ def compressed_allreduce_1d(g: jnp.ndarray, mesh: Mesh, axis: str = "data",
 def compressed_grad_sync(grads, mesh: Mesh, axis: str = "data",
                          min_size: int = 1 << 16,
                          backend: Optional[str] = None):
-    """Apply the compressed all-reduce to every leaf >= min_size elements
-    (small leaves go through a plain f32 psum — stats overhead dominates
-    below ~64k elements). Leaves are averaged over ``axis``."""
+    """Apply the compressed all-reduce to every leaf :func:`leaf_sync_route`
+    deems compressible (small / integer / 0-d / non-divisible leaves go
+    through a plain f32 psum — stats overhead dominates below ~64k
+    elements, and non-float leaves must sum exactly).  Leaves are averaged
+    over ``axis``."""
     n = mesh.shape[axis]
 
     def sync_leaf(g):
-        flat = g.reshape(-1).astype(jnp.float32) / n
-        if flat.shape[0] < min_size or flat.shape[0] % n != 0:
+        if leaf_sync_route(g.shape, g.dtype, n, min_size) == "plain":
+            if jnp.issubdtype(g.dtype, jnp.integer):
+                # integer/bool leaves stay in their own dtype: psum the n
+                # replicated copies and divide back exactly (the sum is a
+                # multiple of n, so floor-division is the true mean) — an
+                # f32 round-trip would truncate and drop bits past 2^24
+                def plain_int(x):
+                    return jax.lax.psum(x, axis) // n
+                return shard_map(plain_int, mesh=mesh, in_specs=P(),
+                                 out_specs=P(), check_rep=False)(g)
+
             def plain(x):
                 return jax.lax.psum(x, axis) / n
             return shard_map(plain, mesh=mesh, in_specs=P(), out_specs=P(),
                              check_rep=False)(g.astype(jnp.float32)).astype(g.dtype)
-        out = compressed_allreduce_1d(flat * n, mesh, axis, backend) / n
+        flat = g.reshape(-1).astype(jnp.float32)
+        out = compressed_allreduce_1d(flat, mesh, axis, backend) / n
         return out.reshape(g.shape).astype(g.dtype)
 
     return jax.tree_util.tree_map(sync_leaf, grads)

@@ -68,7 +68,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -99,18 +99,40 @@ class StatsConfig:
     * ``ema_decay`` — EMA coefficient on the raw (mu, m) moments; 0.0
       means each refresh replaces them (pure delayed stats).
     * ``axis_name`` — when set, refreshes all-reduce the (sum, max, count)
-      partials over that mapped axis: global stats inside shard_map.
+      partials over that mapped axis (a name or tuple of names — psum
+      accepts either): global stats inside shard_map.  Use
+      :func:`for_mesh` to derive it from a mesh's batch axes.
     """
 
     refresh_every: int = 16
     ema_decay: float = 0.0
-    axis_name: Optional[str] = None
+    axis_name: Optional[Union[str, Tuple[str, ...]]] = None
 
     def __post_init__(self):
         if self.refresh_every < 1:
             raise ValueError("refresh_every must be >= 1")
         if not (0.0 <= self.ema_decay < 1.0):
             raise ValueError("ema_decay must be in [0, 1)")
+        if isinstance(self.axis_name, list):
+            # keep the config hashable (it keys lru_caches in core/qdot.py)
+            object.__setattr__(self, "axis_name", tuple(self.axis_name))
+
+
+def for_mesh(cfg: StatsConfig, mesh) -> StatsConfig:
+    """Mesh-aware refresh entry point: bind ``cfg``'s global-stats
+    reduction to ``mesh``'s batch axes, so every refresh inside the
+    mesh-native train step all-reduces the (sum, max, count) partials
+    across the data shards — bank stats are stats of the GLOBAL batch,
+    not the local shard.  ``mesh=None`` (or a mesh with no batch axes)
+    clears ``axis_name``: single-device semantics."""
+    if mesh is None:
+        return dataclasses.replace(cfg, axis_name=None)
+    from repro.parallel import sharding as shd
+    axes = shd.mesh_batch_axes(mesh)
+    if not axes:
+        return dataclasses.replace(cfg, axis_name=None)
+    return dataclasses.replace(
+        cfg, axis_name=axes[0] if len(axes) == 1 else axes)
 
 
 def init_site_state(length: Optional[int] = None) -> Dict[str, jnp.ndarray]:

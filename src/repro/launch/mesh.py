@@ -17,9 +17,35 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh():
-    """Whatever this host actually has — for smoke runs (usually 1 device)."""
+    """Whatever this host actually has — for smoke runs (usually 1 device).
+
+    All devices go on the ``data`` axis, so the mesh-native train step
+    (training/trainer.py) data-parallelizes a multi-device host (e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` CPU smoke
+    runs) out of the box."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_mesh_from_spec(spec: str):
+    """``"DxT"`` mesh specs for the launchers' ``--mesh`` flag.
+
+    Two ints (``"8x1"``) build a ``("data", "model")`` mesh; three
+    (``"2x8x1"``) a ``("pod", "data", "model")`` one.  The product must
+    match the visible device count (``jax.make_mesh`` enforces it)."""
+    try:
+        dims = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"mesh spec {spec!r} is not of the form 'DxT' "
+                         f"or 'PxDxT' (e.g. '8x1')") from None
+    if len(dims) == 2:
+        axes = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(f"mesh spec {spec!r}: want 2 (DxT) or 3 (PxDxT) "
+                         f"factors, got {len(dims)}")
+    return jax.make_mesh(dims, axes)
 
 
 def axis_sizes(mesh) -> dict:

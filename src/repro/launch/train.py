@@ -26,7 +26,8 @@ from repro.core.policy import make_policy
 from repro.checkpoint.manager import CheckpointManager
 from repro.data import synthetic
 from repro.launch import api
-from repro.launch.mesh import make_host_mesh, make_production_mesh, axis_sizes
+from repro.launch.mesh import (axis_sizes, make_host_mesh,
+                               make_mesh_from_spec, make_production_mesh)
 from repro.optim import optimizers, schedules
 from repro.parallel import sharding as shd
 from repro.training.trainer import TrainLoop, make_train_step
@@ -59,7 +60,16 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
-    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--mesh", default="host",
+                    help="'host' (all local devices on the data axis), "
+                         "'single'/'multi' (production 16x16 / 2x16x16), "
+                         "a 'DxT' / 'PxDxT' spec (e.g. '8x1'), or 'none' "
+                         "for the meshless single-device step")
+    ap.add_argument("--grad-sync", default="f32", choices=["f32", "s2fp8"],
+                    help="cross-shard gradient sync under the mesh: plain "
+                         "f32 psum, or the S2FP8-compressed reduce-scatter"
+                         "/all-gather schedule (core/collectives.py) for "
+                         "every compressible leaf")
     ap.add_argument("--track-stats", action="store_true")
     ap.add_argument("--stats-refresh-every", type=int, default=0,
                     help="enable the jit-carried StatsBank: refresh the "
@@ -79,11 +89,15 @@ def main():
           f"gemm: {'payload' if pol.uses_payload_gemm else 'fig4'}")
     key = jax.random.PRNGKey(args.seed)
 
-    if args.mesh == "host":
+    if args.mesh == "none":
+        mesh = None
+    elif args.mesh == "host":
         mesh = make_host_mesh()
-    else:
+    elif args.mesh in ("single", "multi"):
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
-    sizes = axis_sizes(mesh)
+    else:
+        mesh = make_mesh_from_spec(args.mesh)
+    sizes = axis_sizes(mesh) if mesh is not None else {}
 
     loss_fn = api.make_loss_fn(cfg)
     opt = optimizers.adamw(weight_decay=0.01)
@@ -97,7 +111,26 @@ def main():
             ema_decay=args.stats_ema)
     step_fn = make_train_step(loss_fn, opt, sched, pol,
                               track_stats=args.track_stats,
-                              stats=stats_cfg)
+                              stats=stats_cfg, mesh=mesh,
+                              grad_sync_mode=args.grad_sync)
+    if mesh is not None:
+        n_shards = 1
+        for a in ("pod", "data"):
+            n_shards *= sizes.get(a, 1)
+        print(f"[train] mesh {dict(sizes)}: {n_shards}-way data-parallel "
+              f"step, grad sync {args.grad_sync}")
+        if args.batch % n_shards != 0:
+            print(f"[train] WARNING: --batch {args.batch} does not divide "
+                  f"the {n_shards}-way data axis — the divisibility guard "
+                  f"will REPLICATE the batch (every device computes the "
+                  f"full batch; no data-parallel speedup)")
+        if sizes.get("model", 1) > 1:
+            print(f"[train] WARNING: the shard_map train step is "
+                  f"data-parallel only — params/optimizer state are "
+                  f"REPLICATED across the {sizes['model']}-way model axis "
+                  f"and its devices run duplicate compute (TP/FSDP inside "
+                  f"the step is a ROADMAP item); size the mesh as Nx1 to "
+                  f"use every device for data")
 
     table = synthetic.make_markov_table(args.seed, cfg.vocab) \
         if not cfg.enc_dec else None
@@ -111,7 +144,11 @@ def main():
         return synthetic.lm_batch(args.seed, step, args.batch, args.seq,
                                   cfg.vocab, table)
 
-    with mesh, shd.use_rules(shd.TRAIN_RULES, sizes):
+    import contextlib
+    mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
+    rules_ctx = (shd.use_rules(shd.TRAIN_RULES, sizes) if mesh is not None
+                 else contextlib.nullcontext())
+    with mesh_ctx, rules_ctx:
         params = api.init_params(cfg, key)
         opt_state = opt.init(params)
         bank = None

@@ -34,26 +34,48 @@ def _zeros_like_f32(params):
     return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def global_norm(tree) -> jnp.ndarray:
+def global_norm(tree, axis_name=None) -> jnp.ndarray:
+    """L2 norm over every leaf of ``tree``.
+
+    ``axis_name`` makes it correct inside ``shard_map``/``pmap`` when the
+    leaves are per-shard PARTIALS (e.g. gradients before the DP sync, or
+    FSDP-sharded grads): the per-shard sum of squares is psum'd across
+    the mapped axis (a name or tuple of names) before the sqrt, so every
+    shard sees the GLOBAL norm.  Leave it None for replicated trees —
+    post-sync gradients in the mesh-native train step are already global,
+    and a psum there would double-count.
+    """
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
               for x in jax.tree_util.tree_leaves(tree)]
-    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    sq = jnp.sum(jnp.stack(leaves))
+    if axis_name is not None:
+        sq = jax.lax.psum(sq, axis_name)
+    return jnp.sqrt(sq)
 
 
-def clip_by_global_norm(grads, max_norm: float):
-    norm = global_norm(grads)
+def clip_by_global_norm(grads, max_norm: float, axis_name=None):
+    """Scale ``grads`` so their global L2 norm is at most ``max_norm``.
+
+    With ``axis_name``, the norm is the GLOBAL (cross-shard) norm — the
+    psum-aware variant for clipping per-shard gradient partials inside a
+    mapped context; 1-device and N-device clipping then agree (bitwise
+    when the shard partials sum order-exactly; tests/test_mesh_train.py).
+    """
+    norm = global_norm(grads, axis_name=axis_name)
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
     return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
 
 
 def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
-                 clip_norm: Optional[float] = None) -> Optimizer:
+                 clip_norm: Optional[float] = None,
+                 clip_axis_name=None) -> Optimizer:
     def init(params):
         return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
 
     def update(grads, state, params, lr):
         if clip_norm:
-            grads, _ = clip_by_global_norm(grads, clip_norm)
+            grads, _ = clip_by_global_norm(grads, clip_norm,
+                                           axis_name=clip_axis_name)
 
         def new_m_fn(g, m, p):
             g = g.astype(jnp.float32)
@@ -72,11 +94,13 @@ def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
 
 def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
           weight_decay: float = 0.0, clip_norm: Optional[float] = 1.0,
-          moment_dtype=jnp.float32) -> Optimizer:
+          moment_dtype=jnp.float32, clip_axis_name=None) -> Optimizer:
     """AdamW with FP32 master params.  ``moment_dtype=bf16`` halves the
     optimizer-state footprint (the capacity lever for the 340B/1T configs —
     EXPERIMENTS.md §Capacity); moment *arithmetic* stays f32, only storage
-    rounds."""
+    rounds.  ``clip_axis_name`` makes the clip norm psum-aware for
+    per-shard gradient partials inside a mapped context (the mesh-native
+    train step syncs grads BEFORE the optimizer, so it leaves this None)."""
     def _zeros_like(params):
         return jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, moment_dtype), params)
@@ -87,7 +111,8 @@ def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 
     def update(grads, state, params, lr):
         if clip_norm:
-            grads, _ = clip_by_global_norm(grads, clip_norm)
+            grads, _ = clip_by_global_norm(grads, clip_norm,
+                                           axis_name=clip_axis_name)
         t = (state.step + 1).astype(jnp.float32)
         c1 = 1.0 - b1 ** t
         c2 = 1.0 - b2 ** t

@@ -100,6 +100,24 @@ def use_rules(rules: dict, mesh_axes, axis_sizes: Optional[Dict[str, int]] = Non
         _state.rules, _state.mesh_axes, _state.axis_sizes = prev
 
 
+@contextlib.contextmanager
+def suspend_rules():
+    """Deactivate the logical->physical table for the current thread.
+
+    Inside a ``shard_map`` body every tensor is a LOCAL shard and the
+    mesh axes are manual — a ``with_sharding_constraint`` emitted by
+    :func:`shard` would name axes already claimed as manual and fail to
+    trace.  The mesh-native train step (training/trainer.py) wraps its
+    body in this, so models keep their annotations for the pjit/GSPMD
+    launchers while tracing cleanly under shard_map."""
+    prev = (_rules(), _mesh_axes(), _axis_sizes())
+    _state.rules, _state.mesh_axes, _state.axis_sizes = None, (), {}
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh_axes, _state.axis_sizes = prev
+
+
 def resolve(*logical: Optional[str]) -> P:
     """Logical axis names -> PartitionSpec under the active rules."""
     rules = _rules()
@@ -173,3 +191,80 @@ def guarded_spec(shape, *logical: Optional[str]) -> P:
 
 def active() -> bool:
     return _rules() is not None
+
+
+# ---------------------------------------------------------------------------
+# mesh-level spec resolution for the shard_map train step
+# (training/trainer.py ``make_train_step(mesh=...)``)
+# ---------------------------------------------------------------------------
+
+def mesh_batch_axes(mesh) -> Tuple[str, ...]:
+    """Physical mesh axes that carry the batch under the active rule table
+    (``TRAIN_RULES`` when none is active): the axes the mesh-native train
+    step shards its batch over, syncs gradients across, and all-reduces
+    StatsBank partials on.  Only axes present on ``mesh`` are returned —
+    ``("data",)`` for the host/single-pod meshes, ``("pod", "data")``
+    multi-pod."""
+    rules = _rules() or TRAIN_RULES
+    phys = rules.get("batch") or ()
+    return tuple(a for a in phys if a in mesh.axis_names)
+
+
+def mesh_batch_size(mesh) -> int:
+    """Product of the batch-carrying mesh axis sizes (number of data
+    shards the global batch splits into)."""
+    n = 1
+    for a in mesh_batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_is_sharded(tree, mesh) -> bool:
+    """Whether the batch tree actually splits over the mesh's batch axes:
+    the ALL-OR-NOTHING divisibility guard of :func:`mesh_batch_specs`.
+    False means every shard computes the full batch (replication
+    fallback) — callers that aggregate per-shard SUMS (integer count
+    metrics) must divide back by the shard count in that case."""
+    axes = mesh_batch_axes(mesh)
+    n = mesh_batch_size(mesh)
+    leaves = [l for l in jax.tree_util.tree_leaves(tree)
+              if getattr(l, "ndim", 0) >= 1]
+    return bool(axes) and bool(leaves) and all(
+        leaf.shape[0] % n == 0 for leaf in leaves)
+
+
+def mesh_batch_specs(tree, mesh):
+    """Per-leaf PartitionSpecs sharding dim 0 of every batch leaf over the
+    mesh's batch axes — the train step's batch ``in_specs``.  Applies the
+    divisibility guard of :func:`shard` ALL-OR-NOTHING across the tree
+    (:func:`batch_is_sharded`): if any >=1-D leaf's leading dim does not
+    divide by the combined batch-axis size, the WHOLE batch is replicated
+    (every shard computes the full batch — correct, just unsplit).
+    Per-leaf guarding would silently pair a sharded leaf's shard with
+    another leaf's full batch inside the shard_map body.  0-d leaves are
+    always replicated."""
+    axes = mesh_batch_axes(mesh)
+    entry = axes[0] if len(axes) == 1 else axes
+    shardable = batch_is_sharded(tree, mesh)
+
+    def spec(leaf):
+        if not shardable or getattr(leaf, "ndim", 0) == 0:
+            return P()
+        return P(entry)
+
+    return jax.tree_util.tree_map(spec, tree)
+
+
+def train_step_specs(batch, mesh, with_stats: bool = False):
+    """(in_specs, out_specs) for the mesh-native train step's shard_map.
+
+    The step is data-parallel: params / optimizer state / StatsBank carry
+    / step counter are replicated (the ``resolve`` rule table maps every
+    param of the DP step to ``P()``; FSDP/TP spec resolution stays the
+    pjit launchers' job), the batch shards per :func:`mesh_batch_specs`,
+    and every output — post-sync params/opt/bank and psum'd metrics — is
+    replicated."""
+    carry = 3 if with_stats else 2          # params, opt_state[, bank]
+    in_specs = (P(),) * carry + (mesh_batch_specs(batch, mesh), P())
+    out_specs = (P(),) * (carry + 1)        # carry + metrics
+    return in_specs, out_specs

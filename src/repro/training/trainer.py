@@ -1,4 +1,5 @@
-"""Train-step factory: numerics policy + loss scaling + master-FP32 update.
+"""Train-step factory: numerics policy + loss scaling + master-FP32 update,
+single-device or mesh-native.
 
 Implements the paper's Figure 4 training procedure for any model whose loss
 is a closure over a Policy, plus the FP8+LS baselines (Eq. 6: scale the loss
@@ -6,35 +7,57 @@ by lambda, unscale the grads) and S2FP8 statistics tracking (Fig. 5).
 
 ``make_train_step`` returns a pure function
     (params, opt_state, batch, step) -> (params, opt_state, metrics)
-suitable for jax.jit with sharded in/out specs (launch/train.py) or plain
-CPU execution (examples/, tests/).
+suitable for jax.jit.  With ``mesh=...`` the SAME step body runs under
+``shard_map``: the batch shards over the mesh's data axes
+(parallel/sharding.py rules), gradients synchronize through
+``core/collectives.grad_sync_axis`` — a plain f32 psum or the
+S2FP8-compressed reduce-scatter/all-gather schedule (``grad_sync_mode``) —
+and StatsBank refreshes all-reduce their (sum, max, count) partials so
+bank statistics are GLOBAL.  ``mesh=None`` degrades exactly to the
+single-device step (no collectives traced, bit-identical programs).
+
+The distributed-mean convention: the local loss is scaled by
+``1 / n_data_shards`` INSIDE the differentiated function, so per-shard
+gradients are contributions to the global batch mean and the sync is a
+pure SUM.  Folding the normalization into the loss (instead of pmean-ing
+the grads) keeps every per-element cotangent numerically identical to the
+single-device run — the property the bitwise parity suite in
+tests/test_mesh_train.py pins down.  ``loss_fn`` must therefore return a
+batch-MEAN loss (every loss in models/ does).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 
+from repro.core import collectives
 from repro.core import s2fp8
 from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.optim.optimizers import Optimizer, global_norm
+from repro.parallel import sharding as shd
+
+GRAD_SYNC_MODES = ("f32", "s2fp8")
 
 
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     schedule: Callable, policy: Policy,
                     track_stats: bool = False,
                     grad_sync: Optional[Callable] = None,
-                    stats: Optional[statsbank.StatsConfig] = None):
+                    stats: Optional[statsbank.StatsConfig] = None,
+                    mesh=None, grad_sync_mode: str = "f32",
+                    grad_sync_min_size: int = 1 << 16,
+                    grad_sync_backend: Optional[str] = None):
     """loss_fn(params, batch, policy) -> (loss, metrics_dict).
 
     * fp8_ls mode: loss scaled by policy.loss_scale before grad, grads
       unscaled after (paper Eq. 6).
-    * grad_sync: optional cross-replica synchronizer (e.g. the S2FP8-
-      compressed DP all-reduce in core/collectives.py); under pjit the
-      default all-reduce is inserted by GSPMD instead.
+    * grad_sync: optional cross-replica synchronizer for the meshless
+      step (legacy hook; under ``mesh=...`` synchronization is built in
+      and this must be None).
     * track_stats: returns (mu, m, alpha, beta) of a probe gradient tensor
       (paper Fig. 5 evolution plots).
     * stats: a ``statsbank.StatsConfig`` enables the jit-carried StatsBank
@@ -50,6 +73,21 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
       so the carry is pure data flow — jit/pjit/scan/remat safe.  Build
       the initial carry with ``statsbank.init_bank(loss_fn, params,
       batch, policy, cfg)``.
+    * mesh: a ``jax.sharding.Mesh`` makes the step mesh-native: the body
+      runs under ``shard_map`` with the batch sharded over the mesh's
+      batch axes (``parallel/sharding.mesh_batch_specs``), params /
+      optimizer state / bank replicated, gradients SUM-synced across the
+      data shards, loss/metrics psum'd to global means, and — with
+      ``stats`` — the bank's refresh reductions made global via
+      ``statsbank.for_mesh``.  A 1-device mesh reproduces the meshless
+      step bitwise; ``mesh=None`` builds the meshless step itself.
+    * grad_sync_mode: ``"f32"`` — plain f32 psum per gradient leaf;
+      ``"s2fp8"`` — S2FP8-compressed all-reduce (bf16 reduce-scatter +
+      1-byte payload all-gather) for every leaf
+      ``collectives.leaf_sync_route`` deems compressible, plain psum for
+      the rest (small / integer / 0-d / non-divisible leaves).
+      ``grad_sync_min_size`` is the compression floor (elements);
+      ``grad_sync_backend`` picks the encode/decode numerics engine.
 
     The numerics backend (ref jnp vs fused Pallas kernels) rides on the
     policy: ``policy.backend`` is validated at Policy construction and
@@ -59,16 +97,89 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
     if stats is not None and policy.mode not in ("s2fp8", "s2fp8_e4m3"):
         raise ValueError(
             f"StatsBank requires an s2fp8-mode policy, got {policy.mode!r}")
+    if grad_sync_mode not in GRAD_SYNC_MODES:
+        raise ValueError(f"grad_sync_mode must be one of {GRAD_SYNC_MODES}, "
+                         f"got {grad_sync_mode!r}")
+    if mesh is not None and grad_sync is not None:
+        raise ValueError("mesh=... builds its own gradient sync; the "
+                         "legacy grad_sync callable must be None")
+
+    batch_axes = shd.mesh_batch_axes(mesh) if mesh is not None else ()
+    axis_name = (None if not batch_axes
+                 else batch_axes[0] if len(batch_axes) == 1 else batch_axes)
+    n_shards = shd.mesh_batch_size(mesh) if mesh is not None else 1
+    axis_sizes = ({a: mesh.shape[a] for a in batch_axes}
+                  if mesh is not None else {})
+    if stats is not None and mesh is not None:
+        # mesh=None leaves the config untouched: a caller wrapping the
+        # meshless step in their own pmap/shard_map may have set
+        # axis_name themselves (the legacy grad_sync-hook path)
+        stats = statsbank.for_mesh(stats, mesh)
+
+    def _scale_loss(loss):
+        # lambda-scaling (Eq. 6) and the DP mean-normalization both fold
+        # INTO the differentiated function: per-shard grads come out as
+        # contributions to the global batch mean, so the sync is a pure
+        # sum and per-element cotangents match the single-device run.
+        if scale != 1.0:
+            loss = loss * scale
+        if n_shards > 1:
+            loss = loss / float(n_shards)
+        return loss
 
     def scaled_loss(params, batch):
         loss, metrics = loss_fn(params, batch, policy)
-        return loss * scale, metrics
+        return _scale_loss(loss), metrics
+
+    def _sync(grads):
+        if axis_name is not None:
+            return collectives.grad_sync_axis(
+                grads, axis_name, axis_sizes, mode=grad_sync_mode,
+                min_size=grad_sync_min_size, backend=grad_sync_backend)
+        if grad_sync is not None:
+            return grad_sync(grads)
+        return grads
+
+    def _global(x):
+        # scalar metrics are per-shard contributions (already 1/n-scaled):
+        # psum them to the global mean; identity off-mesh.
+        return jax.lax.psum(x, axis_name) if axis_name is not None else x
+
+    def _make_reduce_metrics(int_div: int):
+        # every metric leaf must leave the shard_map replicated (out_specs
+        # P() with check_rep=False would silently report shard 0's local
+        # value otherwise): float leaves psum to the global MEAN of the
+        # per-shard means, integer leaves (counts) psum to the global SUM
+        # — divided back by the shard count when the batch took the
+        # replicated fallback (every shard counted the full batch).
+        def _reduce_metrics(metrics):
+            if axis_name is None:
+                return metrics
+
+            def red(v):
+                v = jnp.asarray(v)
+                if jnp.issubdtype(v.dtype, jnp.floating):
+                    return _global(v / float(n_shards) if n_shards > 1
+                                   else v)
+                if jnp.issubdtype(v.dtype, jnp.integer):
+                    s = _global(v)
+                    return s // int_div if int_div > 1 else s
+                if v.dtype == jnp.bool_:
+                    # flags (diverged/overflow markers) reduce as ANY:
+                    # a True on one shard must survive to the host
+                    return _global(v.astype(jnp.int32)) > 0
+                return v
+            return jax.tree_util.tree_map(red, dict(metrics))
+
+        return _reduce_metrics
 
     def _finish(loss, metrics, grads, params, opt_state, step):
         lr = schedule(step)
         new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
         out = dict(metrics)
         out["loss"] = loss
+        # grads are post-sync (replicated-global under a mesh), so the
+        # plain norm IS the global norm — no axis_name needed here.
         out["grad_norm"] = global_norm(grads)
         out["lr"] = lr
         if track_stats:
@@ -76,46 +187,84 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             out["probe_stats"] = s2fp8.tensor_stats(probe)
         return new_params, new_opt, out
 
-    def train_step(params, opt_state, batch, step):
-        (loss, metrics), grads = jax.value_and_grad(
-            scaled_loss, has_aux=True)(params, batch)
-        if scale != 1.0:
-            grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
-            loss = loss / scale
-        if grad_sync is not None:
-            grads = grad_sync(grads)
-        return _finish(loss, metrics, grads, params, opt_state, step)
+    def _build_step(int_div: int = 1):
+        reduce_metrics = _make_reduce_metrics(int_div)
 
-    if stats is None:
-        return train_step
+        def train_step(params, opt_state, batch, step):
+            (loss, metrics), grads = jax.value_and_grad(
+                scaled_loss, has_aux=True)(params, batch)
+            if scale != 1.0:
+                grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
+                loss = loss / scale
+            grads = _sync(grads)
+            return _finish(_global(loss), reduce_metrics(metrics), grads,
+                           params, opt_state, step)
 
-    def train_step_with_stats(params, opt_state, stats_state, batch, step):
-        def banked_loss(p, bank):
-            with statsbank.bind(bank, step, stats):
-                loss, metrics = loss_fn(p, batch, policy)
-            return loss, metrics
+        def train_step_with_stats(params, opt_state, stats_state, batch,
+                                  step):
+            def banked_loss(p, bank):
+                with statsbank.bind(bank, step, stats):
+                    loss, metrics = loss_fn(p, batch, policy)
+                return _scale_loss(loss), metrics
 
-        (loss, metrics), (grads, bank_cot) = jax.value_and_grad(
-            banked_loss, argnums=(0, 1), has_aux=True)(params, stats_state)
-        new_bank = statsbank.merge_updates(stats_state, bank_cot)
-        if grad_sync is not None:
-            grads = grad_sync(grads)
-        metrics = dict(metrics)
-        # sites also refresh on bootstrap (last < 0), not just on cadence;
-        # one O(n_sites) min over the concatenated bookkeeping scalars —
-        # the single non-cond reduction the bank step adds (asserted in
-        # tests/test_statsbank.py::test_zero_stats_reductions_outside_cond).
-        # bookkeeping_last is structure-agnostic: plain truncation sites
-        # and payload-GEMM nodes (qdot_train) alike.
-        cold = statsbank.bookkeeping_last(stats_state)
-        metrics["stats_refreshed"] = jnp.maximum(
-            (step % stats.refresh_every == 0).astype(jnp.float32),
-            (jnp.min(cold) < 0).astype(jnp.float32))
-        new_params, new_opt, out = _finish(loss, metrics, grads, params,
-                                           opt_state, step)
-        return new_params, new_opt, new_bank, out
+            (loss, metrics), (grads, bank_cot) = jax.value_and_grad(
+                banked_loss, argnums=(0, 1), has_aux=True)(params,
+                                                           stats_state)
+            new_bank = statsbank.merge_updates(stats_state, bank_cot)
+            grads = _sync(grads)
+            metrics = reduce_metrics(metrics)
+            # sites also refresh on bootstrap (last < 0), not just on
+            # cadence; one O(n_sites) min over the concatenated
+            # bookkeeping scalars — the single non-cond reduction the bank
+            # step adds (asserted in tests/test_statsbank.py::
+            # test_zero_stats_reductions_outside_cond).  bookkeeping_last
+            # is structure-agnostic: plain truncation sites and
+            # payload-GEMM nodes (qdot_train) alike.  The bank is
+            # replicated under the mesh (refreshes all-reduce their
+            # partials), so no psum is needed on the probe.
+            cold = statsbank.bookkeeping_last(stats_state)
+            metrics["stats_refreshed"] = jnp.maximum(
+                (step % stats.refresh_every == 0).astype(jnp.float32),
+                (jnp.min(cold) < 0).astype(jnp.float32))
+            new_params, new_opt, out = _finish(_global(loss), metrics,
+                                               grads, params, opt_state,
+                                               step)
+            return new_params, new_opt, new_bank, out
 
-    return train_step_with_stats
+        return train_step if stats is None else train_step_with_stats
+
+    if mesh is None:
+        return _build_step()
+
+    bodies = {}
+
+    def sharded_step(*args):
+        # specs resolve against the CONCRETE batch (divisibility guard
+        # needs leaf shapes), so the shard_map is built per call — free
+        # under jit, which retraces per input structure anyway.  When the
+        # batch takes the replicated fallback, integer count metrics are
+        # divided back by the shard count (every shard counted the full
+        # batch).
+        batch = args[-2]
+        int_div = 1 if shd.batch_is_sharded(batch, mesh) else n_shards
+        if int_div not in bodies:
+            step_fn = _build_step(int_div)
+
+            def local_body(*a, _step_fn=step_fn):
+                # inside shard_map every tensor is a local shard and the
+                # mesh axes are manual: the models' logical-axis
+                # annotations (sharding.shard) must not emit GSPMD
+                # constraints here.
+                with shd.suspend_rules():
+                    return _step_fn(*a)
+
+            bodies[int_div] = local_body
+        in_specs, out_specs = shd.train_step_specs(
+            batch, mesh, with_stats=stats is not None)
+        return shard_map(bodies[int_div], mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    return sharded_step
 
 
 def make_eval_step(loss_fn: Callable, policy: Policy):
@@ -128,12 +277,17 @@ def make_eval_step(loss_fn: Callable, policy: Policy):
 class TrainLoop:
     """Host-side loop: prefetch, checkpoint-every-k, auto-resume, watchdog.
 
-    Single-host here; the multi-host story is in training/fault.py.
+    Single-host here (1 or N local devices — the mesh-native step from
+    ``make_train_step(mesh=...)`` drops in unchanged; jit lays the batch
+    out per the step's shard_map specs); the multi-host story is in
+    training/fault.py.
 
     ``stats_bank``: the StatsBank carry for a step built with
     ``make_train_step(..., stats=...)``.  It is checkpointed alongside
     (params, opt_state) and restored by ``maybe_resume`` — a resumed run
     truncates with warm stats instead of silently bootstrapping cold.
+    Checkpoints gather sharded leaves to host (checkpoint/manager.py), so
+    a carry saved from an N-device mesh restores on any device count.
     """
 
     def __init__(self, train_step, params, opt_state, data_fn,

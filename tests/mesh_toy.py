@@ -1,0 +1,90 @@
+"""Order-exact toy problem for mesh-vs-single-device BITWISE parity.
+
+Floating-point summation does not commute with sharding: a data-parallel
+step sums weight-gradient contractions per shard and psums the partials,
+while a single device reduces the whole batch in one GEMM — generically a
+1-ulp difference.  This toy is engineered so every cross-shard reduction
+is EXACT in f32, making the sharded and single-device pipelines agree bit
+for bit (the same trick as test_statsbank's power-of-two shard test, but
+for a full banked payload train step):
+
+  * ``x`` [B, K] one-hot rows (hot column ``(b + step) % K``, sign ±1) —
+    every forward/backward contraction over the batch or feature axes is
+    a single-term or disjoint-support sum;
+  * ``w`` [K, n] one-hot rows of magnitude 2^-3 — constant log2 magnitude,
+    so every StatsBank site bootstraps into the DEGENERATE stats branch
+    (alpha=1, beta = target - m): the Eq. 5 truncation is an exact fixed
+    point on these values and the refresh reductions sum small integers;
+  * targets ``t`` ±1 dense, batch-mean linear loss => the cotangent is
+    t / global_batch — constant magnitude again;
+  * the policy is ``s2fp8_e4m3``: its forward image pins at 2^8, where
+    XLA CPU's log2/exp2 are exact on powers of two — the e5m2 target 2^15
+    is the ONE value where they are not (log2(32768) = 14.999999...), and
+    that 1-ulp wiggle would leak full-mantissa values into the
+    order-sensitive mean-of-logs reduction.
+
+With ``refresh_every`` > the tested horizon only the bootstrap refresh
+(step 0, all-exact tensors) runs; later steps are reduction-free outside
+``lax.cond`` and every remaining sum (one-hot GEMMs, psums of
+disjoint-support partials, the clip norm over constant-magnitude grads)
+is exact integer arithmetic scaled by powers of two.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+B = 8          # global batch == K so x's one-hot rows are a permutation
+K = 8
+N_FEAT = 16
+LR = 1e-3
+REFRESH_EVERY = 64
+
+
+def make_params():
+    w = np.zeros((K, N_FEAT), np.float32)
+    rng = np.random.RandomState(0)
+    for k in range(K):
+        w[k, rng.randint(N_FEAT)] = rng.choice([-1.0, 1.0]) * 0.125
+    return {"w": jnp.asarray(w)}
+
+
+def make_batch(step: int):
+    rng = np.random.RandomState(1000 + step)
+    x = np.zeros((B, K), np.float32)
+    for b in range(B):
+        x[b, (b + step) % K] = rng.choice([-1.0, 1.0])
+    t = rng.choice([-1.0, 1.0], size=(B, N_FEAT)).astype(np.float32)
+    return {"x": jnp.asarray(x), "t": jnp.asarray(t)}
+
+
+def loss_fn(params, batch, pol):
+    """Batch-MEAN linear loss (the trainer's DP convention): one
+    ``Policy.dot`` => one six-direction StatsBank GEMM node."""
+    y = pol.dot(batch["x"], params["w"])
+    return jnp.mean(jnp.sum(y * batch["t"], axis=-1)), {}
+
+
+def setup(mesh=None, grad_sync_mode="f32"):
+    """(step_fn, params, opt_state, bank, stats_cfg) for the toy."""
+    from repro.core import statsbank
+    from repro.core.policy import make_policy
+    from repro.optim import optimizers, schedules
+    from repro.training.trainer import make_train_step
+
+    pol = make_policy("s2fp8_e4m3", gemm_mode="payload")
+    params = make_params()
+    opt = optimizers.adamw()
+    cfg = statsbank.StatsConfig(refresh_every=REFRESH_EVERY)
+    bank = statsbank.init_bank(loss_fn, params, make_batch(0), pol, cfg)
+    step_fn = make_train_step(loss_fn, opt, schedules.constant(LR), pol,
+                              stats=cfg, mesh=mesh,
+                              grad_sync_mode=grad_sync_mode)
+    return jax.jit(step_fn), params, opt.init(params), bank, cfg
+
+
+def run(step_fn, params, opt_state, bank, n_steps: int, start: int = 0):
+    for s in range(start, n_steps):
+        params, opt_state, bank, metrics = step_fn(
+            params, opt_state, bank, make_batch(s), jnp.int32(s))
+    return params, opt_state, bank, metrics
