@@ -387,6 +387,169 @@ def _banked_lane_times(loss_fn, params, batch, iters: int) -> dict:
     return out
 
 
+def modeled_hbm_bytes_attn(mode: str, s: int, d: int) -> dict:
+    """Modeled per-train-step HBM traffic of ONE attention head (fwd+bwd)
+    at sequence length ``s``, head dim ``d`` — plus the bytes its saved
+    residuals occupy.  Crossing-by-crossing derivations in
+    kernels/README.md ("payload flash dataflow"); the headline is
+    structural: only the flash modes have NO s^2 term, and the payload
+    flash node's residuals are 1-byte payloads.
+
+      * ``einsum_payload`` — the attention einsum PAIR as two batched
+        payload GEMMs (s x d x s scores, s x s x d values; the [s, s]
+        score tensor round-trips HBM between them) + the f32 softmax
+        passes over it (read+write fwd = 8 s^2; backward reads
+        probs/dprobs and writes dscores = 12 s^2).  Residuals: the two
+        GEMM nodes' payloads — q, k, v (1 B each) and the [s, s] probs
+        payload.
+      * ``flash_payload`` — the fused node: quantize q/k/v (4 B read +
+        1 B payload write each), the kernel streams payloads at 1 B and
+        writes the truncated out (4 B) + lse (4 B/row), out re-payloads
+        at 5 B/elt; backward quantizes g (5 B), computes delta from the
+        two payloads (2 B read + 4 B/row write), re-streams 4 payloads
+        through BOTH backward kernels (8 B/elt total) with lse/delta
+        (8 B/row), writes raw dq/dk/dv (12 B) and truncates them
+        (8 B each).  Residuals: four 1-byte payloads + f32 lse rows.
+      * ``fig4_flash`` — flash over the Fig. 4 chain (PR 4's routing):
+        truncate q/k/v (8 B each), flash reads f32 operands (12 B) and
+        writes out (4 B) + lse; out truncation (8 B); backward re-reads
+        the four f32 residuals (16 B), writes raw grads (12 B) and
+        truncates them (24 B).  Residuals: four f32 tensors + lse — the
+        ~4x denominator for the payload node's residual cut.
+    """
+    sd, ss, srow = s * d, s * s, s
+    if mode == "einsum_payload":
+        g1 = modeled_hbm_bytes("payload", s, d, s)["total_bytes"]
+        g2 = modeled_hbm_bytes("payload", s, s, d)["total_bytes"]
+        total = g1 + g2 + 8 * ss + 12 * ss
+        residual = ss + 3 * sd
+    elif mode == "flash_payload":
+        fwd = 15 * sd + 3 * sd + 4 * sd + 4 * srow + 5 * sd
+        bwd = (5 * sd + (2 * sd + 4 * srow) + (8 * sd + 8 * srow)
+               + 12 * sd + 24 * sd)
+        total = fwd + bwd
+        residual = 4 * sd + 4 * srow
+    elif mode == "fig4_flash":
+        fwd = 24 * sd + 12 * sd + 4 * sd + 4 * srow + 8 * sd
+        bwd = 16 * sd + 8 * srow + 12 * sd + 24 * sd
+        total = fwd + bwd
+        residual = 16 * sd + 4 * srow
+    else:
+        raise ValueError(mode)
+    return {"total_bytes": total, "residual_bytes": residual,
+            "bytes_per_element": total / (3 * sd + sd)}
+
+
+def _attn_step_time(loss_fn, pol, params, batch, iters: int) -> float:
+    """One banked steady-state train-step time (us) for an attention loss
+    under ``pol`` — init_bank discovery, one bootstrap refresh step, then
+    the timed non-refresh step (the _banked_lane_times recipe, for lanes
+    where the POLICY ROUTING differs rather than just gemm_mode)."""
+    from repro.core import statsbank
+
+    scfg = statsbank.StatsConfig(refresh_every=16)
+    bank = statsbank.init_bank(loss_fn, params, batch, pol, scfg)
+
+    @jax.jit
+    def banked(p, bk, step):
+        def f(p_, bk_):
+            with statsbank.bind(bk_, step, scfg):
+                l, _ = loss_fn(p_, batch, pol)
+            return l
+        loss, (g, up) = jax.value_and_grad(f, argnums=(0, 1))(p, bk)
+        return loss, g, statsbank.merge_updates(bk, up)
+
+    _, _, bank = jax.block_until_ready(banked(params, bank, jnp.int32(0)))
+    step = jnp.int32(1)
+    return time_jitted(lambda p: banked(p, bank, step)[0], params,
+                       warmup=1, iters=iters)
+
+
+def bench_attn(results, sizes=(1024, 4096, 16384), smoke=False):
+    """Attention lane (ISSUE 6): full fwd+bwd step over one attention op,
+    three ways —
+
+      * ``flash_payload``  — the fused payload flash node
+        (``Policy.flash_attention`` -> core/qdot.qflash_attention):
+        1-byte Q/K/V streaming, VMEM-only score tiles, payload residuals;
+      * ``einsum_payload`` — the pre-fusion routing: the einsum pair as
+        two batched payload GEMMs with the [S, S] score tensor (and its
+        payload residual) round-tripping HBM;
+      * ``fig4``           — the composed Fig. 4 einsum chain.
+
+    All StatsBank steady state.  The einsum lanes materialize the [S, S]
+    scores, so past ``EINSUM_MAX_S`` they are skipped on the CPU lane
+    (recorded explicitly as null) — the modeled bytes column carries the
+    comparison there.
+    """
+    import math as pymath
+
+    from repro.core.policy import make_policy
+
+    EINSUM_MAX_S = 4096
+    d = 64
+    key = jax.random.PRNGKey(11)
+    iters = 2 if smoke else 3
+
+    def flash_loss(p, batch, pol_):
+        out = pol_.flash_attention(p["q"], batch["k"], batch["v"],
+                                   causal=True)
+        return jnp.sum(out * out), {}
+
+    def einsum_loss(p, batch, pol_):
+        # the pre-fusion full_attention body, pinned here so the lane
+        # keeps measuring the einsum pair now that full_attention itself
+        # fast-paths payload policies to the fused node
+        q, k, v = p["q"], batch["k"], batch["v"]
+        s = q.shape[3]
+        logits = pol_.einsum("bkgqd,bksd->bkgqs", q, k) / pymath.sqrt(d)
+        mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        out = pol_.einsum("bkgqs,bksd->bkgqd", probs, v)
+        return jnp.sum(out * out), {}
+
+    for s in sizes:
+        q = jax.random.normal(key, (1, 1, 1, s, d)) * 0.3
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, s, d)) * 0.3
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, s, d)) * 0.3
+        params, batch = {"q": q}, {"k": k, "v": v}
+
+        lane = {"s": s, "d": d}
+        pol_pay = make_policy("s2fp8", gemm_mode="payload")
+        lane["flash_payload_us"] = _attn_step_time(flash_loss, pol_pay,
+                                                   params, batch, iters)
+        emit(f"attn_train_flash_payload_s{s}", lane["flash_payload_us"],
+             "fused payload flash node")
+        if s <= EINSUM_MAX_S:
+            lane["einsum_payload_us"] = _attn_step_time(
+                einsum_loss, pol_pay, params, batch, iters)
+            pol_fig4 = make_policy("s2fp8", gemm_mode="fig4")
+            lane["fig4_us"] = _attn_step_time(einsum_loss, pol_fig4,
+                                              params, batch, iters)
+            lane["flash_vs_einsum_payload"] = (
+                lane["einsum_payload_us"] / lane["flash_payload_us"])
+            emit(f"attn_train_einsum_payload_s{s}",
+                 lane["einsum_payload_us"],
+                 f"flash speedup {lane['flash_vs_einsum_payload']:.2f}x")
+            emit(f"attn_train_fig4_s{s}", lane["fig4_us"],
+                 "composed einsum chain")
+        else:
+            lane["einsum_payload_us"] = None
+            lane["fig4_us"] = None
+            lane["einsum_skipped"] = (
+                f"[S,S] score tensor ({s*s*4/2**30:.1f} GiB f32/head) "
+                "infeasible on the CPU lane")
+        lane["modeled_hbm_bytes"] = {
+            m_: modeled_hbm_bytes_attn(m_, s, d)
+            for m_ in ("einsum_payload", "flash_payload", "fig4_flash")}
+        mb = lane["modeled_hbm_bytes"]
+        lane["residual_cut_vs_fig4_flash"] = (
+            mb["fig4_flash"]["residual_bytes"]
+            / mb["flash_payload"]["residual_bytes"])
+        results["attn"].append(lane)
+
+
 def bench_moe(results, smoke=False):
     """MoE expert-einsum lane: full fwd+bwd step over the two routed
     expert contractions (``ecd,edf->ecf`` up, ``ecf,efd->ecd`` down) —
@@ -453,7 +616,7 @@ def main(smoke: bool = False):
                "platform": jax.default_backend(),
                "n_devices": len(jax.devices()),
                "truncate": [], "quantize": [], "matmul": [], "stats": [],
-               "gemm": [], "moe": [], "conv": [], "dp": []}
+               "gemm": [], "moe": [], "conv": [], "dp": [], "attn": []}
     key = jax.random.PRNGKey(0)
 
     if smoke:
@@ -466,11 +629,12 @@ def main(smoke: bool = False):
         bench_conv(results, smoke=True)
         bench_statsbank(results, smoke=True)
         bench_dp(results, smoke=True)
+        bench_attn(results, sizes=(256,), smoke=True)
         # falsifiable structure checks: every expected lane must have been
         # emitted with finite timings (a lane that silently skipped its
         # work, or a refactor that dropped one, fails the build here)
         assert all(len(results[k]) == 1
-                   for k in ("gemm", "moe", "conv", "stats", "dp")), \
+                   for k in ("gemm", "moe", "conv", "stats", "dp", "attn")), \
             {k: len(v) for k, v in results.items() if isinstance(v, list)}
         import math as _math
         for want in ("fig4_exact_us", "fig4_bank_us", "payload_bank_us"):
@@ -488,6 +652,20 @@ def main(smoke: bool = False):
         # sync moves strictly fewer bytes than f32 at any n > 1
         m = dp["modeled_ici_bytes_per_elt_n8"]
         assert m["s2fp8"] < m["f32"], m
+        # attention lane structure: all three routings timed at smoke S,
+        # the payload flash model has NO s^2 term (doubling S doubles its
+        # bytes instead of quadrupling), and its saved residuals are the
+        # promised ~4x smaller than the f32 fig4-flash residuals
+        at = results["attn"][0]
+        for want in ("flash_payload_us", "einsum_payload_us", "fig4_us"):
+            assert _math.isfinite(at[want]), (want, at[want])
+        f1 = modeled_hbm_bytes_attn("flash_payload", 4096, 64)
+        f2 = modeled_hbm_bytes_attn("flash_payload", 8192, 64)
+        assert f2["total_bytes"] / f1["total_bytes"] < 2.5, (f1, f2)
+        e1 = modeled_hbm_bytes_attn("einsum_payload", 4096, 64)
+        e2 = modeled_hbm_bytes_attn("einsum_payload", 8192, 64)
+        assert e2["total_bytes"] / e1["total_bytes"] > 3.0, (e1, e2)
+        assert at["residual_cut_vs_fig4_flash"] >= 3.5, at
         print("# smoke ok (no JSON written)")
         return
 
@@ -497,6 +675,7 @@ def main(smoke: bool = False):
     bench_moe(results)
     bench_conv(results)
     bench_dp(results)
+    bench_attn(results)
 
     for n in [1 << 16, 1 << 20, 1 << 22]:
         x = jax.random.normal(key, (n,)) * 1e-5

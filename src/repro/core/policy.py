@@ -268,6 +268,33 @@ class Policy:
         ).astype(self.accum_dtype)
         return self._wrap_out(y).astype(x.dtype)
 
+    def flash_attention(self, q, k, v, *, causal: bool = True,
+                        window=None) -> jnp.ndarray:
+        """Fused attention through the policy.
+
+        Layout: q ``[B, KV, G, Sq, d]``; k, v ``[B, KV, Sk, d]`` (the
+        models/flash.py grouped-query convention).  Payload-mode s2fp8
+        policies run the payload-domain flash node
+        (core/qdot.qflash_attention): 1-byte Q/K/V streaming, VMEM-only
+        score tiles, fused Eq. 5 output epilogue, payload residuals — one
+        StatsBank FLASH_DIRS node for the q/k/v/out directions.  Every
+        other mode runs the pure-JAX flash custom-VJP (models/flash.py)
+        with the policy's tensor-level truncations around it, so under a
+        session flash attention consumes the SAME bank sites as the
+        chunked path (q/k/v/out truncation sites in the same order) —
+        flash vs einsum attention see bank numerics, not locally
+        recomputed stats."""
+        if self.uses_payload_gemm:
+            y = qdot_mod.qflash_attention(q, k, v, causal=causal,
+                                          window=window,
+                                          backend=self.backend,
+                                          fmt=self._fmt)
+            return self._qdot_out(y, jnp.result_type(q, k, v))
+        from repro.models.flash import flash_attention as _fa
+        q, k, v = self.truncate(q), self.truncate(k), self.truncate(v)
+        window = None if window is None else int(window)
+        return self.truncate(_fa(q, k, v, causal, window))
+
     def _conv_im2col(self, x, kernel, stride, padding):
         """Payload-domain conv: im2col gather -> dense payload GEMM.
 

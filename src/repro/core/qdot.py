@@ -56,6 +56,7 @@ match every later step (site registration still happens first).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -65,6 +66,7 @@ from repro.core import backend as nbackend
 from repro.core import s2fp8
 from repro.core import statsbank
 from repro.core.backend import QdotPlan
+from repro.kernels import flash_attention as _fkern
 
 # Backward GEMM table: forward layout -> ((dA lhs, dA rhs, dA layout),
 # (dB lhs, dB rhs, dB layout)) with operands named from {"a", "b", "g"}
@@ -275,3 +277,254 @@ def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
         y2 = _qdot_banked(backend, fmt, sess.cfg, plan)(
             a2, b2, entry, sess.pred_f, sess.step_f)
     return y2.reshape(out_shape)
+
+
+# ===========================================================================
+# qflash_attention: the differentiable payload-domain flash attention node
+# ===========================================================================
+#
+# Same contract as qdot_train, fused across the whole attention op: the
+# forward consumes 1-byte Q/K/V payloads, keeps the [S, S] score/prob
+# tensor in VMEM tiles only (never HBM), and applies the Eq. 5 epilogue to
+# the output tile with the out site's bank stats.  The backward is the
+# flash recompute schedule over PAYLOAD residuals: only the 1-byte
+# Q/K/V/out payloads plus the rowwise logsumexp are saved, and the score
+# tiles are rebuilt from the payloads — so attention residuals are
+# ~4x smaller than the Fig. 4 flash chain's four truncated-f32 tensors,
+# on top of the O(S^2) -> O(S) flash residual cut itself.
+
+
+def _payload_flash_fwd(be, qq, qk, qv, causal, window, fmt, bq, bk,
+                       out_stats):
+    """Raw payload flash forward -> (out f32, lse [B,KV,G,Sq,1]).
+
+    Pallas backend: the fused kernel (epilogue truncation in VMEM when
+    ``out_stats`` is given).  Ref backend: dequantize + the pure-jnp
+    grouped flash reference, then an elementwise truncate — same numerics
+    by the truncate == dequant(quant) anchor.
+    """
+    b, kvh, g, sq, d = qq.payload.shape
+    sk = qk.payload.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    if isinstance(be, nbackend.PallasBackend):
+        out, lse = _fkern.qflash_fwd_pallas(
+            qq.payload.reshape(b * kvh * g, sq, d),
+            qk.payload.reshape(b * kvh, sk, d),
+            qv.payload.reshape(b * kvh, sk, d),
+            (qq.alpha, qq.beta), (qk.alpha, qk.beta), (qv.alpha, qv.beta),
+            g=g, causal=causal, window=window, scale=scale,
+            out_stats=out_stats, fmt=fmt, bq=bq, bk=bk)
+        return (out.reshape(b, kvh, g, sq, d),
+                lse.reshape(b, kvh, g, sq, 1))
+    out, lse = _fkern.flash_fwd_reference(
+        be.dequantize(qq), be.dequantize(qk), be.dequantize(qv),
+        causal=causal, window=window, q_chunk=bq, kv_chunk=bk)
+    if out_stats is not None:
+        out = be.truncate(out, stats=out_stats, fmt=fmt)
+    return out, lse
+
+
+def _payload_flash_bwd(be, qq, qk, qv, qg, lse, delta, causal, window,
+                       fmt, bq, bk):
+    """Raw payload flash backward -> (dq, dk, dv) f32, grouped layout.
+
+    Score tiles are recomputed from the 1-byte payloads.  The pallas path
+    runs the two-kernel schedule (dq; per-head dk/dv) and reduces the
+    query-group axis here; the ref path is the pure-jnp recompute
+    reference on dequantized payloads.
+    """
+    b, kvh, g, sq, d = qq.payload.shape
+    sk = qk.payload.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    if isinstance(be, nbackend.PallasBackend):
+        dq, dkh, dvh = _fkern.qflash_bwd_pallas(
+            qq.payload.reshape(b * kvh * g, sq, d),
+            qk.payload.reshape(b * kvh, sk, d),
+            qv.payload.reshape(b * kvh, sk, d),
+            qg.payload.reshape(b * kvh * g, sq, d),
+            (qq.alpha, qq.beta), (qk.alpha, qk.beta), (qv.alpha, qv.beta),
+            (qg.alpha, qg.beta),
+            lse.reshape(b * kvh * g, sq), delta.reshape(b * kvh * g, sq),
+            g=g, causal=causal, window=window, scale=scale, bq=bq, bk=bk)
+        dq = dq.reshape(b, kvh, g, sq, d)
+        # the kernel emits per-head dk/dv (each output block written once);
+        # the grouped-query reduction over g happens here
+        dk = dkh.reshape(b, kvh, g, sk, d).sum(axis=2)
+        dv = dvh.reshape(b, kvh, g, sk, d).sum(axis=2)
+        return dq, dk, dv
+    return _fkern.flash_bwd_reference(
+        be.dequantize(qq), be.dequantize(qk), be.dequantize(qv),
+        be.dequantize(qg), lse, delta,
+        causal=causal, window=window, q_chunk=bq, kv_chunk=bk)
+
+
+@functools.lru_cache(maxsize=None)
+def _qflash_banked(backend: Optional[str], fmt: str,
+                   cfg: statsbank.StatsConfig, causal: bool,
+                   window: Optional[int], bq: int, bk: int):
+    """custom_vjp payload flash attention over (q, k, v, entry, pred_f,
+    step_f).  ``entry`` is one statsbank.FLASH_DIRS bank node; its
+    cotangent is the refreshed entry (the StatsBank update idiom)."""
+    target_max = s2fp8.FMT_TARGET_MAX[fmt]
+
+    def _fwd(q, k, v, entry, pred_f, step_f):
+        be = nbackend.get_backend(backend)
+        qa, qb_, new_qf = statsbank.maybe_refresh(
+            q, entry["q.fwd"], pred_f, step_f, cfg, target_max, backend)
+        ka, kb, new_kf = statsbank.maybe_refresh(
+            k, entry["k.fwd"], pred_f, step_f, cfg, target_max, backend)
+        va, vb, new_vf = statsbank.maybe_refresh(
+            v, entry["v.fwd"], pred_f, step_f, cfg, target_max, backend)
+        qq = be.quantize(q, stats=(qa, qb_), fmt=fmt)
+        qk = be.quantize(k, stats=(ka, kb), fmt=fmt)
+        qv = be.quantize(v, stats=(va, vb), fmt=fmt)
+
+        st = entry["out.fwd"]
+        need = jnp.logical_or(pred_f > 0, st["last"] < 0)
+
+        def _refresh(_):
+            raw, lse = _payload_flash_fwd(be, qq, qk, qv, causal, window,
+                                          fmt, bq, bk, None)
+            new = statsbank.refresh_state(
+                raw, st, step_f, ema_decay=cfg.ema_decay,
+                target_max=target_max, backend=backend,
+                axis_name=cfg.axis_name)
+            out = be.truncate(raw, stats=(new["alpha"], new["beta"]),
+                              fmt=fmt)
+            return out, lse, new["alpha"], new["beta"], new
+
+        def _fused(_):
+            out, lse = _payload_flash_fwd(be, qq, qk, qv, causal, window,
+                                          fmt, bq, bk,
+                                          (st["alpha"], st["beta"]))
+            return out, lse, st["alpha"], st["beta"], st
+
+        out, lse, oa, ob, new_of = jax.lax.cond(need, _refresh, _fused, None)
+        # `out` is already in the out site's representable set, so this
+        # quantization is its exact 1-byte payload — the residual the
+        # backward dequantizes for the delta identity.
+        qo = be.quantize(out, stats=(oa, ob), fmt=fmt)
+        res = (qq, qk, qv, qo, lse, new_qf, new_kf, new_vf, new_of,
+               entry["q.bwd"], entry["k.bwd"], entry["v.bwd"],
+               entry["out.bwd"], pred_f, step_f)
+        return out, res
+
+    @jax.custom_vjp
+    def qflash(q, k, v, entry, pred_f, step_f):
+        return _fwd(q, k, v, entry, pred_f, step_f)[0]
+
+    def _bwd(res, g):
+        (qq, qk, qv, qo, lse, new_qf, new_kf, new_vf, new_of,
+         q_bwd, k_bwd, v_bwd, out_bwd, pred_f, step_f) = res
+        be = nbackend.get_backend(backend)
+        g = g.astype(jnp.float32)
+        ga, gb, new_ob = statsbank.maybe_refresh(
+            g, out_bwd, pred_f, step_f, cfg, target_max, backend)
+        qg = be.quantize(g, stats=(ga, gb), fmt=fmt)
+        # flash-2 rowwise identity D = sum(dout * out) on the dequantized
+        # payloads — the backward's single algorithmic reduction.
+        delta = jnp.sum(be.dequantize(qg) * be.dequantize(qo),
+                        axis=-1, keepdims=True)
+        dq_raw, dk_raw, dv_raw = _payload_flash_bwd(
+            be, qq, qk, qv, qg, lse, delta, causal, window, fmt, bq, bk)
+        a, b, new_qb = statsbank.maybe_refresh(
+            dq_raw, q_bwd, pred_f, step_f, cfg, target_max, backend)
+        dq = be.truncate(dq_raw, stats=(a, b), fmt=fmt)
+        a, b, new_kb = statsbank.maybe_refresh(
+            dk_raw, k_bwd, pred_f, step_f, cfg, target_max, backend)
+        dk = be.truncate(dk_raw, stats=(a, b), fmt=fmt)
+        a, b, new_vb = statsbank.maybe_refresh(
+            dv_raw, v_bwd, pred_f, step_f, cfg, target_max, backend)
+        dv = be.truncate(dv_raw, stats=(a, b), fmt=fmt)
+        entry_cot = {"q.fwd": new_qf, "q.bwd": new_qb,
+                     "k.fwd": new_kf, "k.bwd": new_kb,
+                     "v.fwd": new_vf, "v.bwd": new_vb,
+                     "out.fwd": new_of, "out.bwd": new_ob}
+        return (dq, dk, dv, entry_cot,
+                jnp.zeros_like(pred_f), jnp.zeros_like(step_f))
+
+    qflash.defvjp(_fwd, _bwd)
+    qflash.fwd_impl = _fwd      # residual-inspection hook (tests)
+    return qflash
+
+
+@functools.lru_cache(maxsize=None)
+def _qflash_exact(backend: Optional[str], fmt: str, causal: bool,
+                  window: Optional[int], bq: int, bk: int):
+    """Sessionless variant: fresh exact stats per call, payload-domain
+    compute and payload residuals (mirrors ``_qdot_exact``)."""
+    target_max = s2fp8.FMT_TARGET_MAX[fmt]
+
+    def _fwd(q, k, v):
+        be = nbackend.get_backend(backend)
+        qq = be.quantize(q, fmt=fmt)
+        qk = be.quantize(k, fmt=fmt)
+        qv = be.quantize(v, fmt=fmt)
+        raw, lse = _payload_flash_fwd(be, qq, qk, qv, causal, window, fmt,
+                                      bq, bk, None)
+        so = be.compute_stats(raw, fmt=fmt)
+        out = be.truncate(raw, stats=so, fmt=fmt)
+        qo = be.quantize(out, stats=so, fmt=fmt)
+        return out, (qq, qk, qv, qo, lse)
+
+    @jax.custom_vjp
+    def qflash(q, k, v):
+        return _fwd(q, k, v)[0]
+
+    def _bwd(res, g):
+        qq, qk, qv, qo, lse = res
+        be = nbackend.get_backend(backend)
+        g = g.astype(jnp.float32)
+        qg = be.quantize(g, fmt=fmt)
+        delta = jnp.sum(be.dequantize(qg) * be.dequantize(qo),
+                        axis=-1, keepdims=True)
+        raws = _payload_flash_bwd(be, qq, qk, qv, qg, lse, delta, causal,
+                                  window, fmt, bq, bk)
+        return tuple(be.truncate(d, stats=be.compute_stats(d, fmt=fmt),
+                                 fmt=fmt) for d in raws)
+
+    qflash.defvjp(_fwd, _bwd)
+    qflash.fwd_impl = _fwd
+    return qflash
+
+
+def qflash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     causal: bool = True, window: Optional[int] = None,
+                     backend: Optional[str] = None, fmt: str = "e5m2",
+                     q_chunk: int = 512, kv_chunk: int = 512
+                     ) -> jnp.ndarray:
+    """Differentiable payload-domain flash attention.
+
+    Layout matches models/flash.py: q ``[B, KV, G, Sq, d]``,
+    k/v ``[B, KV, Sk, d]`` (grouped-query).  Inside a StatsBank session
+    this is ONE bank node (eight per-direction states,
+    statsbank.FLASH_DIRS) with zero steady-state stats reductions;
+    outside — and in discovery traces — exact per-call stats.  Returns
+    f32 (the caller casts, matching ``Policy`` conventions).
+    """
+    if q.ndim != 5 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError(f"qflash_attention wants q [B,KV,G,Sq,d], "
+                         f"k/v [B,KV,Sk,d]; got {q.shape}, {k.shape}, "
+                         f"{v.shape}")
+    if (k.shape != v.shape or q.shape[:2] != k.shape[:2]
+            or q.shape[-1] != k.shape[-1]):
+        raise ValueError(f"inconsistent attention shapes: {q.shape}, "
+                         f"{k.shape}, {v.shape}")
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    window = None if window is None else int(window)
+    sess = statsbank.current_session()
+    if sess is None:
+        return _qflash_exact(backend, fmt, causal, window,
+                             q_chunk, kv_chunk)(q, k, v)
+    if sess.discovery:
+        # register the bank node, then run the exact payload path so
+        # step-0 (discovery-traced) numerics match later steps
+        sess.qflash_site()
+        return _qflash_exact(backend, fmt, causal, window,
+                             q_chunk, kv_chunk)(q, k, v)
+    entry = sess.qflash_site()
+    return _qflash_banked(backend, fmt, sess.cfg, causal, window,
+                          q_chunk, kv_chunk)(q, k, v, entry,
+                                             sess.pred_f, sess.step_f)

@@ -89,6 +89,15 @@ STATE_FIELDS = ("alpha", "beta", "ema_mu", "ema_m", "last")
 # same six scalars.
 GEMM_DIRS = ("a.fwd", "a.bwd", "b.fwd", "b.bwd", "out.fwd", "out.bwd")
 
+# Directions of a payload-domain flash-attention node (core/qdot.py
+# ``qflash_attention``): the q/k/v operands and the attention output, each
+# with forward-value and cotangent stats.  Like GEMM_DIRS these are
+# per-tensor scalars, so a fused attention node costs eight scalars
+# regardless of sequence length; every direction has a "bwd" twin, which
+# is what :func:`merge_updates` keys on.
+FLASH_DIRS = ("q.fwd", "q.bwd", "k.fwd", "k.bwd", "v.fwd", "v.bwd",
+              "out.fwd", "out.bwd")
+
 
 @dataclasses.dataclass(frozen=True)
 class StatsConfig:
@@ -356,6 +365,19 @@ class Session:
         if self.discovery:
             self.recorded[key] = {"segment": self._segment[0] if self._segment
                                   else None, "dirs": GEMM_DIRS}
+            return None
+        return self._lookup(key)
+
+    def qflash_site(self) -> Optional[Dict[str, Any]]:
+        """Bank entry for a payload-domain flash-attention node
+        (core/qdot.py ``qflash_attention``): eight per-direction states
+        keyed by :data:`FLASH_DIRS`.  Same custom_vjp bank-update idiom as
+        :meth:`qdot_site` — entry cotangents are the refreshed states.
+        Returns None in discovery mode (after recording the site)."""
+        key = self._site_key("qf")
+        if self.discovery:
+            self.recorded[key] = {"segment": self._segment[0] if self._segment
+                                  else None, "dirs": FLASH_DIRS}
             return None
         return self._lookup(key)
 

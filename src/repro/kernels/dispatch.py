@@ -62,6 +62,16 @@ def _pad_axis(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+def pad_to_lane(x: jnp.ndarray, align: int = LANE_ALIGN) -> jnp.ndarray:
+    """Zero-pad the trailing axis up to a multiple of ``align`` (the MXU
+    lane width).  Exact for S2FP8 payload math: zero elements carry a zero
+    payload, are excluded from stats, and contribute nothing to any
+    contraction — so a padded attention/GEMM over payloads equals the
+    unpadded one on the original columns."""
+    return _pad_axis(x, x.ndim - 1,
+                     _ceil_to(max(x.shape[-1], 1), align))
+
+
 def as_blocked_2d(x: jnp.ndarray, block=DEFAULT_BLOCK) -> jnp.ndarray:
     """Reshape/zero-pad an arbitrary-rank tensor into a tile-aligned,
     block-divisible 2-D layout the kernels accept.  Invert with

@@ -110,7 +110,16 @@ def _attn_einsum(policy: Optional[Policy], spec: str, a, b):
 
 
 def full_attention(q, k, v, *, causal=True, window=None, policy: Policy = None):
-    """q: [B,KV,G,Sq,d]; k,v: [B,KV,Sk,d]. Plain masked softmax attention."""
+    """q: [B,KV,G,Sq,d]; k,v: [B,KV,Sk,d]. Plain masked softmax attention.
+
+    Payload-mode policies take a planner-recognized fast path: the
+    score/value einsum PAIR is one fused payload flash node
+    (policy.flash_attention) instead of two batched payload GEMMs with an
+    HBM round-trip of the [S, S] score tensor between them — same masked
+    softmax semantics, VMEM-only score tiles."""
+    if policy is not None and policy.uses_payload_gemm:
+        return policy.flash_attention(q, k, v, causal=causal,
+                                      window=window).astype(q.dtype)
     d = q.shape[-1]
     sq, sk = q.shape[3], k.shape[2]
     logits = _attn_einsum(policy, "bkgqd,bksd->bkgqs", q, k) / math.sqrt(d)
@@ -429,12 +438,16 @@ def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
         causal = not (cfg.enc_dec and block_type == "encoder")
         if s > 2048:
             if cfg.attn_impl == "flash":
-                from repro.models.flash import flash_attention as _fa
-                if pol is not None:
-                    qg, k, v = pol.truncate(qg), pol.truncate(k), pol.truncate(v)
-                attn = _fa(qg, k, v, causal, window)
-                if pol is not None:
-                    attn = pol.truncate(attn)
+                if pol is None:
+                    from repro.models.flash import flash_attention as _fa
+                    attn = _fa(qg, k, v, causal, window)
+                else:
+                    # session-aware routing: payload policies run the fused
+                    # payload flash node, all others the pure-JAX flash VJP
+                    # with bank-site truncations (not local stats)
+                    attn = pol.flash_attention(
+                        qg, k, v, causal=causal,
+                        window=window).astype(qg.dtype)
             else:
                 attn = chunked_attention(qg, k, v, causal=causal,
                                          window=window, policy=pol)

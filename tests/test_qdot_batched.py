@@ -625,11 +625,12 @@ def test_batched_payload_vs_fig4_training_losses_track():
     np.testing.assert_allclose(losses["payload"], losses["fig4"], rtol=0.05)
 
 
-def test_attention_einsums_route_through_policy():
-    """models/blocks.py attention contractions go through Policy.einsum:
-    payload mode runs them as batched GEMM bank nodes (discovered as qt
-    sites), fig4 as truncation sites — the same dataflow decision as
-    every other bilinear op."""
+def test_attention_routes_through_policy():
+    """models/blocks.py attention goes through the policy: payload mode
+    takes the fused flash fast path (ONE qf bank node for the whole
+    attention op — no [S, S] score round-trip), fig4 keeps the einsum
+    pair as truncation sites — the same dataflow decision as every other
+    bilinear op."""
     from repro.models.blocks import full_attention
     q = jax.random.normal(jax.random.PRNGKey(41), (2, 2, 2, 16, 32)) * 0.1
     k = jax.random.normal(jax.random.PRNGKey(42), (2, 2, 16, 32)) * 0.1
@@ -644,7 +645,8 @@ def test_attention_einsums_route_through_policy():
         assert y.shape == base.shape
         c = np.corrcoef(y.ravel(), base.ravel())[0, 1]
         assert c > 0.99, (gm, c)
-    # discovery sees the two attention contractions as GEMM nodes
+    # discovery sees the fused attention as ONE flash bank node (the
+    # einsum pair no longer appears as two qt GEMM nodes)
     pol = make_policy("s2fp8", backend="ref", gemm_mode="payload")
     sess = statsbank.Session(None, 0, CFG, discovery=True)
     statsbank._ACTIVE.session = sess
@@ -653,4 +655,5 @@ def test_attention_einsums_route_through_policy():
             q_, k_, v_, causal=True, policy=pol), q, k, v)
     finally:
         statsbank._ACTIVE.session = None
-    assert sorted(sess.recorded) == ["qt0", "qt1"]
+    assert sorted(sess.recorded) == ["qf0"]
+    assert sess.recorded["qf0"]["dirs"] == statsbank.FLASH_DIRS
