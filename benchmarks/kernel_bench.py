@@ -611,10 +611,33 @@ def bench_conv(results, smoke=False):
     results["conv"].append(lane)
 
 
+def provenance() -> dict:
+    """Run provenance, recorded once at the top level and stamped on every
+    lane row: a BENCH_kernels.json number is only comparable to another
+    run's if these match (interpret-mode Pallas timings in particular are
+    debug-grade and must never be read against compiled-TPU ones)."""
+    from repro import kernels as rkernels
+    return {"backend": nbackend.get_backend().name,
+            "platform": jax.default_backend(),
+            "interpret": rkernels.auto_interpret(),
+            "jax_version": jax.__version__,
+            "n_devices": len(jax.devices())}
+
+
+def _stamp_provenance(results: dict, prov: dict):
+    """Attach the run provenance to every recorded lane row."""
+    for v in results.values():
+        if isinstance(v, list):
+            for row in v:
+                row["provenance"] = prov
+
+
 def main(smoke: bool = False):
-    results = {"backend": nbackend.get_backend().name,
-               "platform": jax.default_backend(),
-               "n_devices": len(jax.devices()),
+    prov = provenance()
+    results = {"backend": prov["backend"],
+               "platform": prov["platform"],
+               "n_devices": prov["n_devices"],
+               "provenance": prov,
                "truncate": [], "quantize": [], "matmul": [], "stats": [],
                "gemm": [], "moe": [], "conv": [], "dp": [], "attn": []}
     key = jax.random.PRNGKey(0)
@@ -630,12 +653,15 @@ def main(smoke: bool = False):
         bench_statsbank(results, smoke=True)
         bench_dp(results, smoke=True)
         bench_attn(results, sizes=(256,), smoke=True)
+        _stamp_provenance(results, prov)
         # falsifiable structure checks: every expected lane must have been
         # emitted with finite timings (a lane that silently skipped its
         # work, or a refactor that dropped one, fails the build here)
         assert all(len(results[k]) == 1
                    for k in ("gemm", "moe", "conv", "stats", "dp", "attn")), \
             {k: len(v) for k, v in results.items() if isinstance(v, list)}
+        assert all("provenance" in row for k, v in results.items()
+                   if isinstance(v, list) for row in v), "unstamped lane row"
         import math as _math
         for want in ("fig4_exact_us", "fig4_bank_us", "payload_bank_us"):
             v = results["gemm"][0][want]
@@ -702,6 +728,7 @@ def main(smoke: bool = False):
     us = time_jitted(f, q, kv, kv)
     emit("attention_ref_1k", us, "oracle")
 
+    _stamp_provenance(results, prov)
     with open(BENCH_JSON, "w") as fh:
         json.dump(results, fh, indent=2)
     print(f"# wrote {BENCH_JSON}")

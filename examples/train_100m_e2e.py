@@ -46,6 +46,11 @@ def parse_args():
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N host-platform devices (CPU smoke runs); "
                          "must be set before jax initializes")
+    ap.add_argument("--metrics-sink", default=None,
+                    help="route loop records and per-site FP8 health "
+                         "telemetry to a sink: jsonl:<path>, csv:<path>, "
+                         "console (telemetry rides the StatsBank refresh "
+                         "when --stats-refresh-every > 0)")
     return ap.parse_args()
 
 
@@ -114,24 +119,34 @@ def main():
         return synthetic.lm_batch(args.seed, s, args.batch, args.seq,
                                   CFG.vocab, table)
 
+    from repro import obs
+    sink = obs.make_sink(args.metrics_sink) if args.metrics_sink else None
+    telemetry = None
     if args.policy in ("s2fp8", "s2fp8_e4m3") and args.stats_refresh_every:
         stats_cfg = statsbank.StatsConfig(
-            refresh_every=args.stats_refresh_every)
+            refresh_every=args.stats_refresh_every,
+            telemetry=sink is not None)
         bank = statsbank.init_bank(loss_fn, params, data_fn(0), pol,
                                    stats_cfg)
         print(f"[e2e] statsbank: {len(bank)} sites, refresh every "
               f"{stats_cfg.refresh_every} steps"
-              + (" (global under the mesh)" if mesh is not None else ""))
+              + (" (global under the mesh)" if mesh is not None else "")
+              + (", telemetry on" if stats_cfg.telemetry else ""))
+        if sink is not None:
+            telemetry = obs.Telemetry(sink, every=args.stats_refresh_every)
 
     step_fn = make_train_step(loss_fn, opt, sched, pol, stats=stats_cfg,
-                              mesh=mesh, grad_sync_mode=args.grad_sync)
+                              mesh=mesh, grad_sync_mode=args.grad_sync,
+                              telemetry=telemetry)
 
     ck = CheckpointManager(args.ckpt_dir, keep=2)
     loop = TrainLoop(step_fn, params, opt.init(params), data_fn,
                      ckpt_manager=ck, ckpt_every=100, log_every=10,
-                     stats_bank=bank)
+                     stats_bank=bank, sink=sink)
     loop.maybe_resume()
     hist = loop.run(args.steps)
+    if sink is not None:
+        sink.close()
     first = hist[0]["loss"] if loop.start_step == 0 else float("nan")
     print(f"[e2e] done: start-loss {first if first == first else 'resumed'}"
           f" final-loss {hist[-1]['loss']:.4f} over {len(hist)} steps "

@@ -26,6 +26,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Optional, Tuple
 
 import jax
@@ -46,6 +47,10 @@ class CheckpointManager:
         self.compress = compress
         os.makedirs(directory, exist_ok=True)
         self._writer: Optional[threading.Thread] = None
+        # wall-clock of the most recently COMPLETED disk write (async
+        # writes included) — TrainLoop's checkpoint span reads this into
+        # its "checkpoint_saved" telemetry events
+        self.last_write_seconds: float = 0.0
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -64,6 +69,7 @@ class CheckpointManager:
             self._writer = None
 
         def write():
+            t0 = time.perf_counter()
             tmp = self._step_dir(step) + ".tmp"
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
@@ -94,6 +100,7 @@ class CheckpointManager:
                 shutil.rmtree(final)
             os.rename(tmp, final)        # commit point
             self._gc()
+            self.last_write_seconds = time.perf_counter() - t0
 
         if blocking:
             write()

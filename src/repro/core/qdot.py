@@ -110,7 +110,7 @@ def _epilogue_qmatmul(qa, qb, layout, st, pred_f, step_f, cfg, fmt,
         y_raw = _qmm(be, qa, qb, layout, out_batch=out_batch, fmt=fmt)
         new = statsbank.refresh_state(
             y_raw, st, step_f, ema_decay=cfg.ema_decay,
-            target_max=target_max, backend=backend, axis_name=cfg.axis_name)
+            target_max=target_max, backend=backend, axis_name=cfg.axis_name, fmt=fmt)
         return be.truncate(y_raw, stats=(new["alpha"], new["beta"]),
                            fmt=fmt), new
 
@@ -149,9 +149,9 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
     def _fwd(a, b, entry, pred_f, step_f):
         be = nbackend.get_backend(backend)
         aa, ab, new_af = statsbank.maybe_refresh(
-            a, entry["a.fwd"], pred_f, step_f, cfg, target_max, backend)
+            a, entry["a.fwd"], pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         ba, bb, new_bf = statsbank.maybe_refresh(
-            b, entry["b.fwd"], pred_f, step_f, cfg, target_max, backend)
+            b, entry["b.fwd"], pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         qa = be.quantize(a, stats=(aa, ab), fmt=fmt)
         qb = be.quantize(b, stats=(ba, bb), fmt=fmt)
         y, new_of = _epilogue_qmatmul(qa, qb, layout, entry["out.fwd"],
@@ -173,7 +173,7 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
          pred_f, step_f) = res
         be = nbackend.get_backend(backend)
         ga, gb, new_ob = statsbank.maybe_refresh(
-            g, out_bwd, pred_f, step_f, cfg, target_max, backend)
+            g, out_bwd, pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         qg = be.quantize(g, stats=(ga, gb), fmt=fmt)
         ops = {"a": qa, "b": qb, "g": qg}
         dl, dr, dlay, dob = da_spec
@@ -370,11 +370,11 @@ def _qflash_banked(backend: Optional[str], fmt: str,
     def _fwd(q, k, v, entry, pred_f, step_f):
         be = nbackend.get_backend(backend)
         qa, qb_, new_qf = statsbank.maybe_refresh(
-            q, entry["q.fwd"], pred_f, step_f, cfg, target_max, backend)
+            q, entry["q.fwd"], pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         ka, kb, new_kf = statsbank.maybe_refresh(
-            k, entry["k.fwd"], pred_f, step_f, cfg, target_max, backend)
+            k, entry["k.fwd"], pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         va, vb, new_vf = statsbank.maybe_refresh(
-            v, entry["v.fwd"], pred_f, step_f, cfg, target_max, backend)
+            v, entry["v.fwd"], pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         qq = be.quantize(q, stats=(qa, qb_), fmt=fmt)
         qk = be.quantize(k, stats=(ka, kb), fmt=fmt)
         qv = be.quantize(v, stats=(va, vb), fmt=fmt)
@@ -388,7 +388,7 @@ def _qflash_banked(backend: Optional[str], fmt: str,
             new = statsbank.refresh_state(
                 raw, st, step_f, ema_decay=cfg.ema_decay,
                 target_max=target_max, backend=backend,
-                axis_name=cfg.axis_name)
+                axis_name=cfg.axis_name, fmt=fmt)
             out = be.truncate(raw, stats=(new["alpha"], new["beta"]),
                               fmt=fmt)
             return out, lse, new["alpha"], new["beta"], new
@@ -419,7 +419,7 @@ def _qflash_banked(backend: Optional[str], fmt: str,
         be = nbackend.get_backend(backend)
         g = g.astype(jnp.float32)
         ga, gb, new_ob = statsbank.maybe_refresh(
-            g, out_bwd, pred_f, step_f, cfg, target_max, backend)
+            g, out_bwd, pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         qg = be.quantize(g, stats=(ga, gb), fmt=fmt)
         # flash-2 rowwise identity D = sum(dout * out) on the dequantized
         # payloads — the backward's single algorithmic reduction.
@@ -428,13 +428,13 @@ def _qflash_banked(backend: Optional[str], fmt: str,
         dq_raw, dk_raw, dv_raw = _payload_flash_bwd(
             be, qq, qk, qv, qg, lse, delta, causal, window, fmt, bq, bk)
         a, b, new_qb = statsbank.maybe_refresh(
-            dq_raw, q_bwd, pred_f, step_f, cfg, target_max, backend)
+            dq_raw, q_bwd, pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         dq = be.truncate(dq_raw, stats=(a, b), fmt=fmt)
         a, b, new_kb = statsbank.maybe_refresh(
-            dk_raw, k_bwd, pred_f, step_f, cfg, target_max, backend)
+            dk_raw, k_bwd, pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         dk = be.truncate(dk_raw, stats=(a, b), fmt=fmt)
         a, b, new_vb = statsbank.maybe_refresh(
-            dv_raw, v_bwd, pred_f, step_f, cfg, target_max, backend)
+            dv_raw, v_bwd, pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         dv = be.truncate(dv_raw, stats=(a, b), fmt=fmt)
         entry_cot = {"q.fwd": new_qf, "q.bwd": new_qb,
                      "k.fwd": new_kf, "k.bwd": new_kb,

@@ -75,6 +75,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as nbackend
 from repro.core import s2fp8
+from repro.obs import metrics as obs_metrics
 
 STATE_FIELDS = ("alpha", "beta", "ema_mu", "ema_m", "last")
 
@@ -111,11 +112,16 @@ class StatsConfig:
       partials over that mapped axis (a name or tuple of names — psum
       accepts either): global stats inside shard_map.  Use
       :func:`for_mesh` to derive it from a mesh's batch axes.
+    * ``telemetry`` — when True, site states carry the per-site FP8
+      health-metric leaves (:data:`repro.obs.metrics.TELE_FIELDS`),
+      updated inside the refresh ``lax.cond`` (steady steps stay
+      reduction-free); drained by :mod:`repro.obs.telemetry`.
     """
 
     refresh_every: int = 16
     ema_decay: float = 0.0
     axis_name: Optional[Union[str, Tuple[str, ...]]] = None
+    telemetry: bool = False
 
     def __post_init__(self):
         if self.refresh_every < 1:
@@ -144,27 +150,41 @@ def for_mesh(cfg: StatsConfig, mesh) -> StatsConfig:
         cfg, axis_name=axes[0] if len(axes) == 1 else axes)
 
 
-def init_site_state(length: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+def init_site_state(length: Optional[int] = None,
+                    telemetry: bool = False) -> Dict[str, jnp.ndarray]:
     """Fresh per-direction site state: identity stats, empty EMA,
-    ``last = -1`` (bootstrap-refresh on first use)."""
+    ``last = -1`` (bootstrap-refresh on first use).  ``telemetry=True``
+    adds zeroed health-metric leaves (a cold site reports clean)."""
     shape = () if length is None else (length,)
 
     def full(v):
         return jnp.full(shape, v, jnp.float32)
 
-    return {"alpha": full(1.0), "beta": full(0.0), "ema_mu": full(0.0),
-            "ema_m": full(0.0), "last": full(-1.0)}
+    state = {"alpha": full(1.0), "beta": full(0.0), "ema_mu": full(0.0),
+             "ema_m": full(0.0), "last": full(-1.0)}
+    if telemetry:
+        state.update(obs_metrics.init_tele_state(shape))
+    return state
 
 
 def refresh_state(x: jnp.ndarray, state: Dict[str, jnp.ndarray],
                   step_f: jnp.ndarray, *, ema_decay: float = 0.0,
                   target_max: float = s2fp8.TARGET_MAX_LOG2,
                   backend: Optional[str] = None,
-                  axis_name: Optional[str] = None) -> Dict[str, jnp.ndarray]:
+                  axis_name: Optional[str] = None,
+                  fmt: Optional[str] = None) -> Dict[str, jnp.ndarray]:
     """One unconditional refresh: raw moments of ``x`` folded into the
     EMAs, (alpha, beta) re-derived.  The single source of refresh numerics
     — the in-jit ``lax.cond`` branch, the shard_map global path and the
-    eager :class:`HostStatsBank` all call this."""
+    eager :class:`HostStatsBank` all call this.
+
+    A telemetry-enabled ``state`` (extra :data:`TELE_FIELDS
+    <repro.obs.metrics.TELE_FIELDS>` leaves) additionally gets its health
+    metrics recomputed here — measured against the PRE-refresh carried
+    stats, i.e. how unhealthy the delayed stats had become by the time
+    this refresh fired.  ``fmt`` names the payload format for the
+    saturation threshold; when None it is reverse-derived from
+    ``target_max``."""
     be = nbackend.get_backend(backend)
     log_sum, log_max, count = be.compute_stats_partials(x)
     if axis_name is not None:
@@ -189,12 +209,19 @@ def refresh_state(x: jnp.ndarray, state: Dict[str, jnp.ndarray],
     alpha, beta = s2fp8.stats_from_reduction(
         ema_mu, ema_m, jnp.where(valid, 1.0, 0.0), target_max)
     new_last = jnp.where(has, jnp.float32(step_f), state["last"])
-    return {"alpha": alpha, "beta": beta, "ema_mu": ema_mu, "ema_m": ema_m,
-            "last": new_last}
+    new = {"alpha": alpha, "beta": beta, "ema_mu": ema_mu, "ema_m": ema_m,
+           "last": new_last}
+    if obs_metrics.has_telemetry(state):
+        new.update(obs_metrics.health_update(
+            x, state, new, mu_t, m_t, has, first, count,
+            fmt=obs_metrics.resolve_fmt(fmt, target_max),
+            backend=backend, axis_name=axis_name))
+    return new
 
 
 def maybe_refresh(x, state, pred_f, step_f, cfg: StatsConfig,
-                  target_max: float, backend: Optional[str]):
+                  target_max: float, backend: Optional[str],
+                  fmt: Optional[str] = None):
     """(alpha_used, beta_used, new_state) with the reduction under
     ``lax.cond`` — non-refresh steps run zero reductions.  Refresh steps
     truncate with the freshly derived stats (refresh-then-use), matching
@@ -205,7 +232,7 @@ def maybe_refresh(x, state, pred_f, step_f, cfg: StatsConfig,
         x_, st = operand
         new = refresh_state(x_, st, step_f, ema_decay=cfg.ema_decay,
                             target_max=target_max, backend=backend,
-                            axis_name=cfg.axis_name)
+                            axis_name=cfg.axis_name, fmt=fmt)
         return new["alpha"], new["beta"], new
 
     def keep(operand):
@@ -333,18 +360,18 @@ class Session:
         @jax.custom_vjp
         def t(x, fs, bs, pred_f, step_f):
             a, b, _ = maybe_refresh(x, fs, pred_f, step_f, cfg,
-                                     target_max, backend)
+                                     target_max, backend, fmt=fmt)
             return routed(x, a, b)
 
         def t_fwd(x, fs, bs, pred_f, step_f):
             a, b, new_fs = maybe_refresh(x, fs, pred_f, step_f, cfg,
-                                          target_max, backend)
+                                          target_max, backend, fmt=fmt)
             return routed(x, a, b), (new_fs, bs, pred_f, step_f)
 
         def t_bwd(res, g):
             new_fs, bs, pred_f, step_f = res
             a, b, new_bs = maybe_refresh(g, bs, pred_f, step_f, cfg,
-                                          target_max, backend)
+                                          target_max, backend, fmt=fmt)
             # cotangents of (fs, bs) are the REFRESHED entries — this is
             # how the new bank leaves the trace (grad w.r.t. the bank).
             return (routed(g, a, b), new_fs, new_bs,
@@ -493,7 +520,8 @@ def init_bank(loss_fn: Callable, params, batch, policy,
     for key, info in sess.recorded.items():
         length = (sess.segment_lengths.get(info["segment"])
                   if info["segment"] else None)
-        bank[key] = {d: init_site_state(length) for d in info["dirs"]}
+        bank[key] = {d: init_site_state(length, telemetry=cfg.telemetry)
+                     for d in info["dirs"]}
     if not bank:
         raise ValueError(
             "no truncation sites found — StatsBank requires an s2fp8-mode "

@@ -1,0 +1,206 @@
+"""s2fp8-doctor: per-site FP8 health report for a checkpointed run.
+
+Loads a checkpoint (params + optimizer state + StatsBank), replays ONE
+synthetic batch per requested backend with every StatsBank refresh
+forced, and prints a ranked per-site health report: saturation /
+underflow fractions measured against the bank's carried stats,
+quantization SNR, EMA-vs-live moment drift, staleness, and an e4m3/e5m2
+format recommendation per site (range vs resolution — the manual half of
+the ROADMAP's format-autotuning item).
+
+    PYTHONPATH=src python -m repro.launch.doctor --arch minicpm_2b \
+        --reduced --ckpt-dir /tmp/ckpt --backends ref,pallas
+
+Checkpoints saved without a bank (or with a different site structure —
+e.g. a fig4-mode checkpoint probed under the payload GEMM routing) fall
+back to a cold bank for that backend: sites bootstrap with fresh stats
+and report clean, which is exactly what a fresh run would do.
+
+``--smoke`` is the CI self-test: initializes a tiny transformer, saves a
+fresh checkpoint, verifies the healthy probe reports clean, then
+verifies a deliberately saturating synthetic tensor is flagged
+(sat_frac > 0, e4m3 -> e5m2 recommendation).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_config, get_reduced_config
+from repro.core import backend as nbackend
+from repro.core import policy as policy_mod
+from repro.core import statsbank
+from repro.core.policy import make_policy
+from repro.data import synthetic
+from repro.launch import api
+from repro.obs import doctor as obs_doctor
+from repro.obs import metrics as obs_metrics
+from repro.optim import optimizers
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="s2fp8-doctor", description=__doc__)
+    ap.add_argument("--arch", default="transformer_tiny")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--policy", default="s2fp8",
+                    choices=["s2fp8", "s2fp8_e4m3"])
+    ap.add_argument("--backends", default="ref",
+                    help="comma-separated numerics backends to probe "
+                         f"(available: {', '.join(nbackend.available_backends())})")
+    ap.add_argument("--gemm-mode", default="auto",
+                    choices=policy_mod.GEMM_MODES)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step to load (default: newest)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--refresh-every", type=int, default=16,
+                    help="refresh cadence for the staleness flag context")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-test: fresh tiny-transformer checkpoint "
+                         "reports clean; a saturating tensor is flagged")
+    return ap
+
+
+def _data(cfg, args):
+    if cfg.enc_dec:
+        b = synthetic.seq2seq_batch(args.seed, 0, args.batch, args.seq,
+                                    args.seq, cfg.vocab)
+        return {"enc_inputs": b["enc_tokens"], "dec_tokens": b["dec_tokens"],
+                "dec_labels": b["dec_labels"]}
+    table = synthetic.make_markov_table(args.seed, cfg.vocab)
+    return synthetic.lm_batch(args.seed, 0, args.batch, args.seq,
+                              cfg.vocab, table)
+
+
+def _restore(ckpt_dir, step, params, opt_state, bank):
+    """(params, opt_state, bank_or_None, step): try (params, opt, bank)
+    templates with and without telemetry leaves, then the bankless
+    layout.  A leaf-count mismatch (different site structure / no bank in
+    the checkpoint) falls through rather than failing the report."""
+    ck = CheckpointManager(ckpt_dir)
+    for tmpl_bank in (bank, obs_metrics.ensure_telemetry(bank)):
+        try:
+            (p, o, b), s = ck.restore((params, opt_state, tmpl_bank), step)
+            return p, o, b, s
+        except ValueError:
+            continue
+    (p, o), s = ck.restore((params, opt_state), step)
+    return p, o, None, s
+
+
+def run(args) -> int:
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    loss_fn = api.make_loss_fn(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = optimizers.adamw(weight_decay=0.01)
+    opt_state = opt.init(params)
+    batch = _data(cfg, args)
+    base_cfg = statsbank.StatsConfig(refresh_every=args.refresh_every)
+
+    for backend_name in args.backends.split(","):
+        pol = make_policy(args.policy, backend=backend_name,
+                          gemm_mode=args.gemm_mode)
+        # this backend's expected site structure (gemm routing differs
+        # between payload and fig4 modes)
+        expected = statsbank.init_bank(loss_fn, params, batch, pol, base_cfg)
+        bank, probe_step, p, o = expected, 0, params, opt_state
+        if args.ckpt_dir:
+            p, o, restored, s = _restore(args.ckpt_dir, args.step,
+                                         params, opt_state, expected)
+            probe_step = s
+            if restored is not None:
+                bank = restored
+            else:
+                print(f"[s2fp8-doctor] checkpoint bank does not match "
+                      f"backend {backend_name!r}'s site structure "
+                      f"(or has no bank) — probing a cold bank")
+        probed, loss = obs_doctor.probe_bank(loss_fn, p, batch, pol, bank,
+                                             base_cfg, step=probe_step)
+        rows = obs_doctor.site_report(probed, step=probe_step,
+                                      refresh_every=args.refresh_every)
+        print(obs_doctor.format_report(rows, backend=backend_name,
+                                       loss=loss, top=args.top))
+    return 0
+
+
+def _smoke(args) -> int:
+    # 1) freshly-initialized tiny transformer checkpoint -> clean report
+    args.arch, args.reduced = "transformer_tiny", True
+    args.batch, args.seq = 2, 16
+    cfg = get_reduced_config(args.arch)
+    loss_fn = api.make_loss_fn(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = optimizers.adamw(weight_decay=0.01)
+    opt_state = opt.init(params)
+    batch = _data(cfg, args)
+    pol = make_policy(args.policy, backend="ref", gemm_mode=args.gemm_mode)
+    base_cfg = statsbank.StatsConfig(refresh_every=args.refresh_every)
+    bank = statsbank.init_bank(loss_fn, params, batch, pol, base_cfg)
+    with tempfile.TemporaryDirectory() as td:
+        CheckpointManager(td).save(0, (params, opt_state, bank))
+        args.ckpt_dir = td
+        p, o, restored, s = _restore(td, None, params, opt_state, bank)
+        assert restored is not None, "smoke: bank failed to restore"
+        probed, loss = obs_doctor.probe_bank(loss_fn, p, batch, pol,
+                                             restored, base_cfg, step=s)
+    rows = obs_doctor.site_report(probed, step=s,
+                                  refresh_every=args.refresh_every)
+    print(obs_doctor.format_report(rows, backend="ref", loss=loss,
+                                   top=args.top))
+    if not rows:
+        print("[s2fp8-doctor] smoke FAILED: no sites probed")
+        return 1
+    unhealthy = [r for r in rows if not obs_doctor.is_clean(r)]
+    if unhealthy:
+        print(f"[s2fp8-doctor] smoke FAILED: fresh checkpoint reported "
+              f"{len(unhealthy)} unhealthy sites")
+        return 1
+
+    # 2) saturating synthetic tensor -> SAT flag + e4m3 -> e5m2 rec
+    def toy_loss(p_, b_, pol_):
+        return jnp.sum(pol_.dot(b_, p_["w"]) ** 2), {}
+
+    tpol = make_policy("s2fp8_e4m3", backend="ref", gemm_mode="fig4")
+    tparams = {"w": jax.random.normal(jax.random.PRNGKey(1), (16, 8),
+                                      jnp.float32) * 0.1}
+    tbatch = jax.random.normal(jax.random.PRNGKey(2), (8, 16), jnp.float32)
+    tbank = statsbank.init_bank(toy_loss, tparams, tbatch, tpol, base_cfg)
+    # warm the bank on the in-range batch, then probe one scaled 2^12x
+    # hotter — the carried stats must report saturation
+    warm, _ = obs_doctor.probe_bank(toy_loss, tparams, tbatch, tpol,
+                                    tbank, base_cfg, step=0)
+    probed, _ = obs_doctor.probe_bank(toy_loss, tparams,
+                                      tbatch * jnp.float32(2.0 ** 12),
+                                      tpol, warm, base_cfg, step=1)
+    rows = obs_doctor.site_report(probed, step=1,
+                                  refresh_every=args.refresh_every)
+    print(obs_doctor.format_report(rows, backend="ref", top=args.top))
+    worst = rows[0]
+    ok = (worst["sat_frac"] > 0 and "SAT" in worst["flags"]
+          and worst["recommend"] == "e5m2")
+    if not ok:
+        print("[s2fp8-doctor] smoke FAILED: saturating tensor not flagged")
+        return 1
+    print("[s2fp8-doctor] smoke ok: fresh checkpoint clean, saturating "
+          "site flagged with e5m2 recommendation")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.smoke:
+        return _smoke(args)
+    return run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

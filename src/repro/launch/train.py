@@ -28,6 +28,7 @@ from repro.data import synthetic
 from repro.launch import api
 from repro.launch.mesh import (axis_sizes, make_host_mesh,
                                make_mesh_from_spec, make_production_mesh)
+from repro import obs
 from repro.optim import optimizers, schedules
 from repro.parallel import sharding as shd
 from repro.training.trainer import TrainLoop, make_train_step
@@ -78,6 +79,14 @@ def main():
     ap.add_argument("--stats-ema", type=float, default=0.0,
                     help="EMA decay on the raw (mu, m) moments at each "
                          "StatsBank refresh (0 = replace)")
+    ap.add_argument("--metrics-sink", default=None,
+                    help="route loop records (step spans, watchdog / "
+                         "checkpoint events, per-site FP8 health) to a "
+                         "sink: jsonl:<path>, csv:<path>, console")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry per-site FP8 health metrics in the "
+                         "StatsBank (requires --stats-refresh-every) and "
+                         "drain them to --metrics-sink each refresh")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -108,11 +117,22 @@ def main():
     if args.stats_refresh_every > 0:
         stats_cfg = statsbank.StatsConfig(
             refresh_every=args.stats_refresh_every,
-            ema_decay=args.stats_ema)
+            ema_decay=args.stats_ema,
+            telemetry=args.telemetry)
+    if args.telemetry and stats_cfg is None:
+        raise SystemExit("--telemetry requires --stats-refresh-every > 0 "
+                         "(health metrics ride the StatsBank refresh)")
+    # no sink spec: loop records fall back to the console (TrainLoop's
+    # default), telemetry (if on) prints through an explicit ConsoleSink
+    sink = obs.make_sink(args.metrics_sink) if args.metrics_sink else \
+        (obs.ConsoleSink() if args.telemetry else None)
+    telemetry = (obs.Telemetry(sink, every=args.stats_refresh_every)
+                 if args.telemetry else None)
     step_fn = make_train_step(loss_fn, opt, sched, pol,
                               track_stats=args.track_stats,
                               stats=stats_cfg, mesh=mesh,
-                              grad_sync_mode=args.grad_sync)
+                              grad_sync_mode=args.grad_sync,
+                              telemetry=telemetry)
     if mesh is not None:
         n_shards = 1
         for a in ("pod", "data"):
@@ -160,10 +180,12 @@ def main():
         ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
         loop = TrainLoop(step_fn, params, opt_state, data_fn,
                          ckpt_manager=ckpt, ckpt_every=args.ckpt_every,
-                         stats_bank=bank)
+                         stats_bank=bank, sink=sink)
         if args.resume == "auto" and ckpt is not None and ckpt.latest_step():
             loop.maybe_resume()
         history = loop.run(args.steps)
+    if sink is not None:
+        sink.close()
     final = history[-1] if history else {}
     print(f"[train] done: final loss {final.get('loss'):.4f}")
 

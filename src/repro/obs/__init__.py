@@ -1,0 +1,24 @@
+"""Numerics observability: per-site FP8 health metrics riding the
+StatsBank refresh, pluggable metrics sinks, and the telemetry drain.
+
+Import layering (``core/statsbank.py`` imports ``repro.obs.metrics``, so
+nothing here may import statsbank):
+
+* :mod:`repro.obs.metrics`   — metric math + telemetry site-state leaves
+* :mod:`repro.obs.sinks`     — MetricsSink protocol + jsonl/csv/console
+* :mod:`repro.obs.telemetry` — TelemetryState extraction + io_callback drain
+* :mod:`repro.obs.doctor`    — checkpoint health reports (imports
+  statsbank; import it directly, not through this package root)
+"""
+from repro.obs.metrics import (TELE_FIELDS, ensure_telemetry, has_telemetry,
+                               init_tele_state, strip_telemetry)
+from repro.obs.sinks import (ConsoleSink, CsvSink, JsonlSink, MemorySink,
+                             MetricsSink, NullSink, TeeSink, make_sink)
+from repro.obs.telemetry import Telemetry, state_records, telemetry_state
+
+__all__ = [
+    "TELE_FIELDS", "ensure_telemetry", "has_telemetry", "init_tele_state",
+    "strip_telemetry", "ConsoleSink", "CsvSink", "JsonlSink", "MemorySink",
+    "MetricsSink", "NullSink", "TeeSink", "make_sink", "Telemetry",
+    "state_records", "telemetry_state",
+]

@@ -1,0 +1,153 @@
+"""Per-site FP8 health metrics — the numbers behind the telemetry layer.
+
+Each metric answers one question the loss curve cannot:
+
+* ``sat_frac``   — fraction of nonzero elements whose shifted/squeezed
+  log-magnitude lands at or past the payload format's max finite value
+  (``log2|Y| >= log2(fmax)``): the carried (alpha, beta) no longer keep
+  the tensor inside the representable range (paper Eq. 5 clamps these).
+* ``uflow_frac`` — fraction of nonzero elements the truncation flushes to
+  exactly zero: the shift has pushed them below the format's smallest
+  magnitude (the resolution side of the range-vs-resolution tradeoff).
+* ``qmse``       — mean squared truncation error vs the pre-truncation
+  tensor, ``mean((truncate(x) - x)^2)``.
+* ``qsnr_db``    — quantization signal-to-noise ratio,
+  ``10*log10(sum(x^2) / sum((truncate(x) - x)^2))``; 0 when either sum is
+  exactly zero (no signal / exact truncation).
+* ``drift_mu`` / ``drift_m`` — ``|EMA - live|`` distance between the
+  bank's carried (mu, m) moments and the live tensor's raw Eq. 3–4
+  moments at refresh time: how stale the delayed stats had become.
+
+All of them are computed INSIDE the StatsBank refresh ``lax.cond``
+(:func:`repro.core.statsbank.refresh_state` calls :func:`health_update`),
+measured against the **pre-refresh carried stats** — fresh stats never
+saturate by construction, so measuring post-refresh would always read
+clean.  On the bootstrap refresh (``last < 0``) there are no carried
+stats and the fresh ones are used: a cold site reports clean.  Steady
+(non-refresh) steps run none of this — the zero-steady-state-reduction
+invariant the jaxpr tests assert is untouched.
+
+This module must not import ``repro.core.statsbank`` (statsbank imports
+it); it only depends on the backend registry and the s2fp8 math.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as nbackend
+from repro.core import s2fp8
+
+# Extra per-direction site-state leaves carried by a telemetry-enabled
+# bank (StatsConfig(telemetry=True)).  They ride the same pytree as the
+# (alpha, beta, ema_mu, ema_m, last) stats — through scan xs, custom_vjp
+# cotangents, merge_updates and checkpoints — with zero new plumbing.
+TELE_FIELDS = ("sat_frac", "uflow_frac", "qmse", "qsnr_db",
+               "drift_mu", "drift_m")
+
+# Reverse lookup: refresh callers pass target_max; the metric needs the
+# payload format's max finite value.  Falls back to e5m2 (the paper's
+# format) for non-standard target_max values.
+_FMT_FROM_TARGET = {float(v): k for k, v in s2fp8.FMT_TARGET_MAX.items()}
+
+
+def resolve_fmt(fmt: Optional[str], target_max: float) -> str:
+    if fmt is not None:
+        return fmt
+    return _FMT_FROM_TARGET.get(float(target_max), "e5m2")
+
+
+def init_tele_state(shape: Tuple[int, ...] = ()) -> Dict[str, jnp.ndarray]:
+    """Zeroed telemetry leaves (a cold site reports clean)."""
+    return {f: jnp.zeros(shape, jnp.float32) for f in TELE_FIELDS}
+
+
+def has_telemetry(state: Dict[str, jnp.ndarray]) -> bool:
+    return TELE_FIELDS[0] in state
+
+
+def health_update(x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                  new_stats: Dict[str, jnp.ndarray],
+                  mu_t: jnp.ndarray, m_t: jnp.ndarray,
+                  has: jnp.ndarray, first: jnp.ndarray,
+                  count: jnp.ndarray, *, fmt: str,
+                  backend: Optional[str] = None,
+                  axis_name: Optional[Union[str, Tuple[str, ...]]] = None
+                  ) -> Dict[str, jnp.ndarray]:
+    """One refresh's health metrics (see module docstring for definitions).
+
+    ``new_stats`` holds the freshly derived (alpha, beta); ``mu_t``/``m_t``
+    are the live raw moments and ``count`` the (already-global) nonzero
+    count from the refresh reduction.  Under ``axis_name`` the metric
+    partials are psum'd exactly like the stats partials, so sharded
+    metrics are metrics of the GLOBAL tensor.
+    """
+    # Measure with the stats that actually truncated recent steps: the
+    # carried pair, except on bootstrap where only the fresh pair exists.
+    a_used = jnp.where(first, new_stats["alpha"], state["alpha"])
+    b_used = jnp.where(first, new_stats["beta"], state["beta"])
+    xf = x.astype(jnp.float32)
+    be = nbackend.get_backend(backend)
+    t = be.truncate(xf, stats=(a_used, b_used), fmt=fmt).astype(jnp.float32)
+
+    absx = jnp.abs(xf)
+    nonzero = absx > 0.0
+    ylog = a_used * jnp.log2(jnp.where(nonzero, absx, 1.0)) + b_used
+    log_fmax = jnp.log2(jnp.float32(s2fp8.FMT_MAX_FINITE[fmt]))
+
+    sat = jnp.sum(jnp.logical_and(nonzero, ylog >= log_fmax)
+                  .astype(jnp.float32))
+    uflow = jnp.sum(jnp.logical_and(nonzero, t == 0.0).astype(jnp.float32))
+    err2 = jnp.sum(jnp.square(t - xf))
+    sig2 = jnp.sum(jnp.square(xf))
+    size = jnp.float32(xf.size)
+    if axis_name is not None:
+        sat, uflow, err2, sig2, size = jax.lax.psum(
+            (sat, uflow, err2, sig2, size), axis_name)
+
+    denom = jnp.maximum(count, 1.0)
+    qmse = err2 / jnp.maximum(size, 1.0)
+    # dB via a log-ratio with floored operands; exactly-zero error or
+    # signal reports 0 rather than +/-inf.
+    ok = jnp.logical_and(err2 > 0.0, sig2 > 0.0)
+    qsnr_db = jnp.where(
+        ok, 10.0 * (jnp.log10(jnp.maximum(sig2, 1e-38))
+                    - jnp.log10(jnp.maximum(err2, 1e-38))), 0.0)
+    live = jnp.logical_and(has, jnp.logical_not(first))
+    drift_mu = jnp.where(live, jnp.abs(state["ema_mu"] - mu_t), 0.0)
+    drift_m = jnp.where(live, jnp.abs(state["ema_m"] - m_t), 0.0)
+    return {"sat_frac": (sat / denom).astype(jnp.float32),
+            "uflow_frac": (uflow / denom).astype(jnp.float32),
+            "qmse": qmse.astype(jnp.float32),
+            "qsnr_db": qsnr_db.astype(jnp.float32),
+            "drift_mu": drift_mu.astype(jnp.float32),
+            "drift_m": drift_m.astype(jnp.float32)}
+
+
+def ensure_telemetry(bank: Dict[str, Dict[str, Dict[str, jnp.ndarray]]]
+                     ) -> Dict[str, Dict[str, Dict[str, jnp.ndarray]]]:
+    """Widen a bank's site states with zeroed telemetry leaves (no-op for
+    states that already carry them) — how the doctor probes a checkpoint
+    that was trained with telemetry off."""
+    out = {}
+    for site, entry in bank.items():
+        out[site] = {}
+        for d, st in entry.items():
+            if has_telemetry(st):
+                out[site][d] = dict(st)
+            else:
+                widened = dict(st)
+                widened.update(init_tele_state(st["alpha"].shape))
+                out[site][d] = widened
+    return out
+
+
+def strip_telemetry(bank: Dict[str, Dict[str, Dict[str, jnp.ndarray]]]
+                    ) -> Dict[str, Dict[str, Dict[str, jnp.ndarray]]]:
+    """Drop telemetry leaves — restores the plain five-leaf site layout
+    (e.g. to restore a telemetry-on checkpoint into a telemetry-off run)."""
+    return {site: {d: {k: v for k, v in st.items() if k not in TELE_FIELDS}
+                   for d, st in entry.items()}
+            for site, entry in bank.items()}

@@ -1,0 +1,93 @@
+"""TelemetryState: the jit-carried view of a telemetry-enabled StatsBank,
+and the host-side drain that turns it into sink records.
+
+The health metrics (:mod:`repro.obs.metrics`) live as extra leaves of the
+bank's site states, updated inside the refresh ``lax.cond``.
+:func:`telemetry_state` is a PURE elementwise extraction of those leaves
+(plus derived staleness) — no reductions, so attaching telemetry to a
+train step cannot disturb the jaxpr-asserted zero-steady-state-reduction
+invariant.  The trainer ships the state off-device with
+``jax.experimental.io_callback`` into :class:`Telemetry`, which flattens
+it into per-site ``"site_health"`` records for a
+:class:`~repro.obs.sinks.MetricsSink`.  Under a mesh the drain runs on
+the replicated post-``shard_map`` bank, so each step emits exactly once.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs.sinks import MetricsSink
+
+
+def telemetry_state(bank: Dict[str, Any], step) -> Dict[str, Any]:
+    """Extract ``{site: {dir: {metric: leaf}}}`` from a bank.  Purely
+    elementwise (zero reductions).  Sites without telemetry leaves are
+    skipped; the result is ``{}`` for a telemetry-off bank.  ``staleness``
+    is steps since the direction's last refresh (-1 = never refreshed)."""
+    step_f = jnp.asarray(step, jnp.float32)
+    out: Dict[str, Any] = {}
+    for site, entry in bank.items():
+        dirs = {}
+        for d, st in entry.items():
+            if not obs_metrics.has_telemetry(st):
+                continue
+            rec = {f: st[f] for f in obs_metrics.TELE_FIELDS}
+            rec["staleness"] = jnp.where(
+                st["last"] >= 0, step_f - st["last"], -1.0)
+            rec["alpha"] = st["alpha"]
+            rec["beta"] = st["beta"]
+            dirs[d] = rec
+        if dirs:
+            out[site] = dirs
+    return out
+
+
+def state_records(state: Dict[str, Any], step: int
+                  ) -> Iterator[Dict[str, Any]]:
+    """Flatten a (host-side) TelemetryState into ``"site_health"`` sink
+    records — one per site-direction, or one per layer row for scanned
+    segments ([L]-shaped leaves)."""
+    for site in sorted(state):
+        for d in sorted(state[site]):
+            rec = state[site][d]
+            leaf = np.asarray(rec["staleness"])
+            if leaf.ndim == 0:
+                yield {"kind": "site_health", "step": step, "site": site,
+                       "dir": d, "layer": None,
+                       **{k: float(np.asarray(v)) for k, v in rec.items()}}
+            else:
+                for i in range(leaf.shape[0]):
+                    yield {"kind": "site_health", "step": step, "site": site,
+                           "dir": d, "layer": i,
+                           **{k: float(np.asarray(v)[i])
+                              for k, v in rec.items()}}
+
+
+class Telemetry:
+    """Host endpoint of the telemetry drain.
+
+    ``drain(state, step)`` is the ``io_callback`` target: it receives the
+    TelemetryState as host arrays every step and forwards flattened
+    records to the sink every ``every`` steps (telemetry values only
+    change on refresh steps, so ``every`` is typically the bank's
+    ``refresh_every``)."""
+
+    def __init__(self, sink: MetricsSink, every: int = 1):
+        if every < 1:
+            raise ValueError("Telemetry every must be >= 1")
+        self.sink = sink
+        self.every = int(every)
+
+    def drain(self, state: Dict[str, Any], step) -> None:
+        step_i = int(np.asarray(step))
+        if step_i % self.every != 0:
+            return
+        for rec in state_records(state, step_i):
+            self.sink.emit(rec)
+
+    def flush(self) -> None:
+        self.sink.flush()

@@ -40,3 +40,40 @@ contract implemented by the pieces in this repo.
      a degraded link the same code path is the mitigation knob (enable
      compression, shrink the sync volume).
 """
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+
+class Watchdog:
+    """Per-step wall-time straggler detector (design point 3 above).
+
+    ``observe(step, dt)`` compares ``dt`` against ``factor`` times the
+    median of the trailing ``window`` step times seen BEFORE this step
+    (the current step must not dilute its own baseline), once at least
+    ``min_history`` steps have accumulated.  Returns an event dict
+    (``dt_s`` / ``median_s`` / ``factor``) on a trip, None otherwise —
+    TrainLoop forwards trips to its metrics sink as ``"watchdog"``
+    events.  Trips are recorded in ``events`` for post-hoc inspection."""
+
+    def __init__(self, factor: float = 3.0, window: int = 32,
+                 min_history: int = 8):
+        if factor <= 0:
+            raise ValueError("watchdog factor must be > 0")
+        self.factor = float(factor)
+        self.window = int(window)
+        self.min_history = int(min_history)
+        self.times: List[float] = []
+        self.events: List[Dict[str, float]] = []
+
+    def observe(self, step: int, dt: float) -> Optional[Dict[str, float]]:
+        event = None
+        if len(self.times) >= self.min_history:
+            trail = sorted(self.times[-self.window:])
+            med = trail[len(trail) // 2]
+            if dt > self.factor * med:
+                event = {"step": step, "dt_s": float(dt),
+                         "median_s": float(med), "factor": self.factor}
+                self.events.append(event)
+        self.times.append(float(dt))
+        return event

@@ -31,14 +31,17 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import io_callback
 from jax.experimental.shard_map import shard_map
 
 from repro.core import collectives
 from repro.core import s2fp8
 from repro.core import statsbank
 from repro.core.policy import Policy
+from repro.obs import telemetry as obs_telemetry
 from repro.optim.optimizers import Optimizer, global_norm
 from repro.parallel import sharding as shd
+from repro.training import fault
 
 GRAD_SYNC_MODES = ("f32", "s2fp8")
 
@@ -50,7 +53,8 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     stats: Optional[statsbank.StatsConfig] = None,
                     mesh=None, grad_sync_mode: str = "f32",
                     grad_sync_min_size: int = 1 << 16,
-                    grad_sync_backend: Optional[str] = None):
+                    grad_sync_backend: Optional[str] = None,
+                    telemetry: Optional[obs_telemetry.Telemetry] = None):
     """loss_fn(params, batch, policy) -> (loss, metrics_dict).
 
     * fp8_ls mode: loss scaled by policy.loss_scale before grad, grads
@@ -88,6 +92,13 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
       the rest (small / integer / 0-d / non-divisible leaves).
       ``grad_sync_min_size`` is the compression floor (elements);
       ``grad_sync_backend`` picks the encode/decode numerics engine.
+    * telemetry: a ``repro.obs.Telemetry`` drains the bank's per-site
+      health metrics host-side via ``io_callback`` each step (requires
+      ``stats`` with ``telemetry=True`` for non-empty metrics).  The
+      drain is a pure elementwise extraction — it adds ZERO reduce
+      primitives, preserving the steady-state jaxpr invariant.  Under a
+      mesh it runs on the replicated post-shard_map bank, so each step
+      emits exactly once.
 
     The numerics backend (ref jnp vs fused Pallas kernels) rides on the
     policy: ``policy.backend`` is validated at Policy construction and
@@ -97,6 +108,8 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
     if stats is not None and policy.mode not in ("s2fp8", "s2fp8_e4m3"):
         raise ValueError(
             f"StatsBank requires an s2fp8-mode policy, got {policy.mode!r}")
+    if telemetry is not None and stats is None:
+        raise ValueError("telemetry requires a StatsBank (stats=...)")
     if grad_sync_mode not in GRAD_SYNC_MODES:
         raise ValueError(f"grad_sync_mode must be one of {GRAD_SYNC_MODES}, "
                          f"got {grad_sync_mode!r}")
@@ -144,6 +157,28 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
         # scalar metrics are per-shard contributions (already 1/n-scaled):
         # psum them to the global mean; identity off-mesh.
         return jax.lax.psum(x, axis_name) if axis_name is not None else x
+
+    def _drain_telemetry(bank, step):
+        # ship the bank's telemetry leaves to the host sink; a pure
+        # elementwise extraction (no reductions), ordered so records hit
+        # the sink in step order.  Empty for telemetry-off banks.  Under
+        # a mesh the callback must be PINNED to one device: the bank is
+        # replicated, and an unplaced io_callback in a multi-device
+        # program trips XLA's sharding propagation (and would otherwise
+        # fire once per device).
+        if telemetry is None:
+            return
+        state = obs_telemetry.telemetry_state(bank, step)
+        if state:
+            if mesh is None:
+                io_callback(telemetry.drain, None, state, step,
+                            ordered=True)
+            else:
+                # ordered effects are single-device only; records carry
+                # their step, so cross-step ordering is recoverable
+                io_callback(telemetry.drain, None, state, step,
+                            sharding=jax.sharding.SingleDeviceSharding(
+                                mesh.devices.flat[0]))
 
     def _make_reduce_metrics(int_div: int):
         # every metric leaf must leave the shard_map replicated (out_specs
@@ -226,6 +261,10 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             metrics["stats_refreshed"] = jnp.maximum(
                 (step % stats.refresh_every == 0).astype(jnp.float32),
                 (jnp.min(cold) < 0).astype(jnp.float32))
+            if mesh is None:
+                # mesh path drains AFTER shard_map (replicated bank, one
+                # callback) — see sharded_step
+                _drain_telemetry(new_bank, step)
             new_params, new_opt, out = _finish(_global(loss), metrics,
                                                grads, params, opt_state,
                                                step)
@@ -261,8 +300,11 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             bodies[int_div] = local_body
         in_specs, out_specs = shd.train_step_specs(
             batch, mesh, with_stats=stats is not None)
-        return shard_map(bodies[int_div], mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False)(*args)
+        out = shard_map(bodies[int_div], mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)(*args)
+        if stats is not None:
+            _drain_telemetry(out[2], args[-1])
+        return out
 
     return sharded_step
 
@@ -288,12 +330,19 @@ class TrainLoop:
     truncates with warm stats instead of silently bootstrapping cold.
     Checkpoints gather sharded leaves to host (checkpoint/manager.py), so
     a carry saved from an N-device mesh restores on any device count.
+
+    ``sink``: a ``repro.obs.MetricsSink`` receiving the loop's records —
+    per-step ``"train_step"`` lines with span timings (data / device-
+    sync'd step / checkpoint / refresh wall-clock) and ``"event"``
+    records (watchdog trips, checkpoint saves).  Defaults to a
+    ``ConsoleSink`` over ``run``'s ``print_fn``, which reproduces the
+    historical log lines.
     """
 
     def __init__(self, train_step, params, opt_state, data_fn,
                  ckpt_manager=None, ckpt_every: int = 0,
                  log_every: int = 10, watchdog_factor: float = 3.0,
-                 stats_bank=None):
+                 stats_bank=None, sink=None):
         donate = (0, 1) if stats_bank is None else (0, 1, 2)
         self.train_step = jax.jit(train_step, donate_argnums=donate)
         self.params = params
@@ -304,6 +353,7 @@ class TrainLoop:
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.watchdog_factor = watchdog_factor
+        self.sink = sink
         self.start_step = 0
         self.history = []
 
@@ -327,9 +377,13 @@ class TrainLoop:
 
     def run(self, steps: int, print_fn=print):
         import time
-        times = []
+        from repro.obs.sinks import ConsoleSink
+        sink = self.sink if self.sink is not None else ConsoleSink(print_fn)
+        watchdog = fault.Watchdog(self.watchdog_factor)
         for step in range(self.start_step, steps):
+            t_fetch = time.perf_counter()
             batch = self.data_fn(step)
+            data_s = time.perf_counter() - t_fetch
             t0 = time.perf_counter()
             if self.stats_bank is None:
                 self.params, self.opt_state, metrics = self.train_step(
@@ -338,23 +392,39 @@ class TrainLoop:
                 self.params, self.opt_state, self.stats_bank, metrics = \
                     self.train_step(self.params, self.opt_state,
                                     self.stats_bank, batch, jnp.int32(step))
+            # device-sync the span: the step dispatches asynchronously, so
+            # wall-clock without the barrier measures dispatch, not compute
+            jax.block_until_ready((self.params, metrics))
+            dt = time.perf_counter() - t0
             metrics = {k: (float(v) if hasattr(v, "item") and getattr(v, 'ndim', 1) == 0 else v)
                        for k, v in metrics.items()}
-            dt = time.perf_counter() - t0
             # straggler watchdog: flag steps > factor x trailing median
-            if len(times) >= 8:
-                med = sorted(times[-32:])[len(times[-32:]) // 2]
-                if dt > self.watchdog_factor * med:
-                    print_fn(f"[watchdog] step {step} took {dt:.3f}s "
-                             f"(median {med:.3f}s) — straggler suspected")
-            times.append(dt)
+            event = watchdog.observe(step, dt)
+            if event is not None:
+                sink.emit({"kind": "event", "event": "watchdog",
+                           "step": step, **event})
             self.history.append(metrics)
-            if self.log_every and step % self.log_every == 0:
-                print_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
-                         f"lr {metrics['lr']:.2e} t {dt*1e3:.0f}ms")
+            t1 = time.perf_counter()
+            saved = False
             if self.ckpt is not None and self.ckpt_every and \
                     (step + 1) % self.ckpt_every == 0:
                 self.ckpt.save(step + 1, self._ckpt_tree(), blocking=False)
+                saved = True
+            ckpt_s = time.perf_counter() - t1
+            if saved:
+                sink.emit({"kind": "event", "event": "checkpoint_saved",
+                           "step": step + 1, "blocking_s": ckpt_s,
+                           "write_s": getattr(self.ckpt,
+                                              "last_write_seconds", 0.0)})
+            if self.log_every and step % self.log_every == 0:
+                refreshed = bool(metrics.get("stats_refreshed", 0.0))
+                sink.emit({"kind": "train_step", "step": step,
+                           "loss": metrics["loss"], "lr": metrics["lr"],
+                           "grad_norm": metrics.get("grad_norm"),
+                           "data_ms": data_s * 1e3, "step_ms": dt * 1e3,
+                           "ckpt_ms": ckpt_s * 1e3 if saved else 0.0,
+                           "refresh_ms": dt * 1e3 if refreshed else 0.0})
         if self.ckpt is not None:
             self.ckpt.wait()
+        sink.flush()
         return self.history

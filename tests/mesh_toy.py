@@ -65,7 +65,7 @@ def loss_fn(params, batch, pol):
     return jnp.mean(jnp.sum(y * batch["t"], axis=-1)), {}
 
 
-def setup(mesh=None, grad_sync_mode="f32"):
+def setup(mesh=None, grad_sync_mode="f32", telemetry=False):
     """(step_fn, params, opt_state, bank, stats_cfg) for the toy."""
     from repro.core import statsbank
     from repro.core.policy import make_policy
@@ -75,7 +75,8 @@ def setup(mesh=None, grad_sync_mode="f32"):
     pol = make_policy("s2fp8_e4m3", gemm_mode="payload")
     params = make_params()
     opt = optimizers.adamw()
-    cfg = statsbank.StatsConfig(refresh_every=REFRESH_EVERY)
+    cfg = statsbank.StatsConfig(refresh_every=REFRESH_EVERY,
+                                telemetry=telemetry)
     bank = statsbank.init_bank(loss_fn, params, make_batch(0), pol, cfg)
     step_fn = make_train_step(loss_fn, opt, schedules.constant(LR), pol,
                               stats=cfg, mesh=mesh,
