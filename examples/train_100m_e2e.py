@@ -51,6 +51,15 @@ def parse_args():
                          "telemetry to a sink: jsonl:<path>, csv:<path>, "
                          "console (telemetry rides the StatsBank refresh "
                          "when --stats-refresh-every > 0)")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the in-step StepGuard + the TrainLoop "
+                         "escalation ladder (training/guard.py): bad steps "
+                         "are rejected in-trace and escalate skip -> "
+                         "forced refresh -> snapshot rollback -> restore")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="with --guard: push the train carry onto the "
+                         "in-memory snapshot ring every K clean steps "
+                         "(the ladder's rollback target)")
     return ap.parse_args()
 
 
@@ -135,14 +144,28 @@ def main():
         if sink is not None:
             telemetry = obs.Telemetry(sink, every=args.stats_refresh_every)
 
+    guard_cfg = None
+    guard_state = None
+    if args.guard:
+        from repro.training import guard as guard_mod
+        guard_cfg = guard_mod.GuardConfig()
+        guard_state = guard_mod.init_state()
+        print("[e2e] stepguard armed"
+              + (f", snapshot ring every {args.snapshot_every}"
+                 if args.snapshot_every else ""))
+
     step_fn = make_train_step(loss_fn, opt, sched, pol, stats=stats_cfg,
                               mesh=mesh, grad_sync_mode=args.grad_sync,
-                              telemetry=telemetry)
+                              telemetry=telemetry, guard=guard_cfg)
 
-    ck = CheckpointManager(args.ckpt_dir, keep=2)
+    # event_fn surfaces checkpoint_quarantined through the same sink the
+    # ladder's intervention events use
+    ck = CheckpointManager(args.ckpt_dir, keep=2,
+                           event_fn=sink.emit if sink is not None else None)
     loop = TrainLoop(step_fn, params, opt.init(params), data_fn,
                      ckpt_manager=ck, ckpt_every=100, log_every=10,
-                     stats_bank=bank, sink=sink)
+                     stats_bank=bank, sink=sink, guard_state=guard_state,
+                     snapshot_every=args.snapshot_every)
     loop.maybe_resume()
     hist = loop.run(args.steps)
     if sink is not None:

@@ -19,20 +19,40 @@ Design (scales to multi-host; exercised single-host here):
   * retention: keep the latest ``keep`` checkpoints; GC is also atomic.
   * async-flush: ``save(..., blocking=False)`` hands the host copy to a
     writer thread so the train loop is not stalled on disk.
+
+Hardening (the resilience layer; tests/test_resilience.py):
+
+  * integrity: every committed step dir carries a ``MANIFEST.json`` with
+    per-file CRC32 + size.  ``restore`` validates before reading — a
+    truncated leaf, a flipped bit, or a missing manifest all fail closed.
+  * quarantine: a dir that fails validation is renamed to
+    ``step_<N>.quarantined`` (kept for post-mortem, invisible to
+    ``latest_step``/GC) and an ``event_fn`` record
+    ``checkpoint_quarantined`` is emitted; ``restore(step=None)`` then
+    falls back to the next-newest VALID checkpoint instead of crashing —
+    the behavior ``--resume auto`` and the escalation ladder's rung 4
+    rely on.
+  * transient-I/O retry: every write/read attempt retries up to
+    ``retries`` times with exponential backoff + jitter (decorrelates a
+    thundering herd of restarting hosts hitting shared storage).
 """
 from __future__ import annotations
 
 import json
 import os
+import random
 import shutil
 import threading
 import time
-from typing import Any, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import s2fp8
+
+MANIFEST = "MANIFEST.json"
 
 
 def _flatten(tree):
@@ -40,17 +60,62 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _step_of(name: str) -> Optional[int]:
+    """step_0000000012 -> 12; anything else (tmp, quarantined, stray
+    files) -> None.  The single parser every directory scan goes through,
+    so a quarantine rename can never crash GC or latest_step."""
+    if not name.startswith("step_"):
+        return None
+    digits = name[len("step_"):]
+    return int(digits) if digits.isdigit() else None
+
+
+def _file_crc(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            buf = f.read(chunk)
+            if not buf:
+                return crc
+            crc = zlib.crc32(buf, crc)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, compress: bool = False):
+    def __init__(self, directory: str, keep: int = 3, compress: bool = False,
+                 retries: int = 3, backoff_s: float = 0.05,
+                 event_fn: Optional[Callable[[Dict[str, Any]], None]] = None):
         self.dir = directory
         self.keep = keep
         self.compress = compress
+        self.retries = max(int(retries), 1)
+        self.backoff_s = backoff_s
+        # structured-event hook (TrainLoop wires its sink's emit here);
+        # quarantines and retry exhaustion surface through it
+        self.event_fn = event_fn
         os.makedirs(directory, exist_ok=True)
         self._writer: Optional[threading.Thread] = None
         # wall-clock of the most recently COMPLETED disk write (async
         # writes included) — TrainLoop's checkpoint span reads this into
         # its "checkpoint_saved" telemetry events
         self.last_write_seconds: float = 0.0
+
+    def _emit(self, record: Dict[str, Any]):
+        if self.event_fn is not None:
+            self.event_fn(record)
+
+    def _with_retry(self, fn, what: str):
+        """Run ``fn`` with exponential backoff + jitter on OSError — the
+        transient-I/O class (NFS hiccups, contended shared storage).  The
+        last failure re-raises; corruption is NOT retried (it goes through
+        validation/quarantine instead)."""
+        for attempt in range(self.retries):
+            try:
+                return fn()
+            except OSError:
+                if attempt == self.retries - 1:
+                    raise
+                delay = self.backoff_s * (2 ** attempt)
+                time.sleep(delay * (1.0 + random.random()))
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -68,14 +133,14 @@ class CheckpointManager:
             self._writer.join()          # backpressure: one in-flight write
             self._writer = None
 
-        def write():
-            t0 = time.perf_counter()
+        def write_once():
             tmp = self._step_dir(step) + ".tmp"
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             meta = {"step": step, "n_leaves": len(host_leaves),
                     "compress": self.compress}
+            files = []
             for i, leaf in enumerate(host_leaves):
                 # compression is for big >=2-D weight/activation leaves;
                 # scalars and 1-D leaves (StatsBank entries, norm scales,
@@ -84,21 +149,35 @@ class CheckpointManager:
                 if (self.compress and leaf.dtype in (np.float32,)
                         and leaf.size >= 4096 and leaf.ndim >= 2):
                     t = s2fp8.quantize(leaf)
-                    np.save(os.path.join(tmp, f"leaf_{i:05d}.payload.npy"),
+                    files.append(f"leaf_{i:05d}.payload.npy")
+                    np.save(os.path.join(tmp, files[-1]),
                             np.asarray(t.payload).view(np.uint8))
-                    np.save(os.path.join(tmp, f"leaf_{i:05d}.stats.npy"),
-                            np.asarray([float(t.alpha), float(t.beta)], np.float32))
+                    files.append(f"leaf_{i:05d}.stats.npy")
+                    np.save(os.path.join(tmp, files[-1]),
+                            np.asarray([float(t.alpha), float(t.beta)],
+                                       np.float32))
                     meta[f"leaf_{i}"] = {"kind": "s2fp8",
                                          "shape": list(leaf.shape)}
                 else:
-                    np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+                    files.append(f"leaf_{i:05d}.npy")
+                    np.save(os.path.join(tmp, files[-1]), leaf)
                     meta[f"leaf_{i}"] = {"kind": "raw"}
+            manifest = {"files": {
+                name: {"crc32": _file_crc(os.path.join(tmp, name)),
+                       "size": os.path.getsize(os.path.join(tmp, name))}
+                for name in files}}
+            with open(os.path.join(tmp, MANIFEST), "w") as f:
+                json.dump(manifest, f)
             with open(os.path.join(tmp, "META.json"), "w") as f:
                 json.dump(meta, f)
             final = self._step_dir(step)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)        # commit point
+
+        def write():
+            t0 = time.perf_counter()
+            self._with_retry(write_once, f"save step {step}")
             self._gc()
             self.last_write_seconds = time.perf_counter() - t0
 
@@ -114,20 +193,91 @@ class CheckpointManager:
             self._writer = None
 
     # ------------------------------------------------------------------
-    def latest_step(self) -> Optional[int]:
+    # integrity
+    # ------------------------------------------------------------------
+    def validate(self, step: int) -> Tuple[bool, str]:
+        """Check a committed step dir against its manifest: META present,
+        MANIFEST present, every listed file present with matching size and
+        CRC32.  Pre-manifest dirs (or any tampering that removes the
+        manifest) fail closed."""
+        d = self._step_dir(step)
+        if not os.path.exists(os.path.join(d, "META.json")):
+            return False, "missing META.json"
+        mpath = os.path.join(d, MANIFEST)
+        if not os.path.exists(mpath):
+            return False, "missing manifest"
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError):
+            return False, "unreadable manifest"
+        for name, info in manifest.get("files", {}).items():
+            path = os.path.join(d, name)
+            if not os.path.exists(path):
+                return False, f"missing file {name}"
+            if os.path.getsize(path) != info["size"]:
+                return False, f"size mismatch {name}"
+            if _file_crc(path) != info["crc32"]:
+                return False, f"checksum mismatch {name}"
+        return True, "ok"
+
+    def quarantine(self, step: int, reason: str):
+        """Rename a corrupt step dir out of the scan namespace (kept on
+        disk for post-mortem) and emit ``checkpoint_quarantined``."""
+        src = self._step_dir(step)
+        dst = src + ".quarantined"
+        if os.path.exists(dst):
+            shutil.rmtree(dst, ignore_errors=True)
+        os.rename(src, dst)
+        self._emit({"kind": "event", "event": "checkpoint_quarantined",
+                    "step": step, "reason": reason, "path": dst})
+
+    # ------------------------------------------------------------------
+    def _committed_steps(self):
         steps = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp") \
-                    and os.path.exists(os.path.join(self.dir, name, "META.json")):
-                steps.append(int(name.split("_")[1]))
+            s = _step_of(name)
+            if s is not None and os.path.exists(
+                    os.path.join(self.dir, name, "META.json")):
+                steps.append(s)
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._committed_steps()
         return max(steps) if steps else None
 
-    def restore(self, template: Any, step: Optional[int] = None) -> Tuple[Any, int]:
-        """Restore into the structure of ``template`` (newest step if None)."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+    def restore(self, template: Any, step: Optional[int] = None
+                ) -> Tuple[Any, int]:
+        """Restore into the structure of ``template``.
+
+        ``step=None`` walks committed checkpoints newest -> oldest,
+        validating each against its manifest; corrupt dirs are
+        quarantined (with a ``checkpoint_quarantined`` event) and the
+        walk continues — the caller gets the newest VALID state or
+        FileNotFoundError when none survives.  An explicit ``step`` is
+        validated the same way but raises instead of falling back (the
+        caller asked for THAT step)."""
+        if step is not None:
+            ok, reason = self.validate(step)
+            if not ok:
+                raise ValueError(
+                    f"checkpoint step {step} failed validation: {reason}")
+            return self._read(template, step), step
+        candidates = self._committed_steps()
+        for s in reversed(candidates):
+            ok, reason = self.validate(s)
+            if not ok:
+                self.quarantine(s, reason)
+                continue
+            try:
+                return self._read(template, s), s
+            except (OSError, ValueError) as e:
+                # readable-manifest-but-unreadable-data (or a template
+                # mismatch from a stale run) — same fallback path
+                self.quarantine(s, f"read failed: {e}")
+        raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+
+    def _read(self, template: Any, step: int) -> Any:
         d = self._step_dir(step)
         with open(os.path.join(d, "META.json")) as f:
             meta = json.load(f)
@@ -139,21 +289,24 @@ class CheckpointManager:
         for i, tmpl in enumerate(leaves):
             info = meta[f"leaf_{i}"]
             if info["kind"] == "s2fp8":
-                payload = np.load(os.path.join(d, f"leaf_{i:05d}.payload.npy"))
-                stats = np.load(os.path.join(d, f"leaf_{i:05d}.stats.npy"))
+                payload = self._with_retry(
+                    lambda p=os.path.join(d, f"leaf_{i:05d}.payload.npy"):
+                    np.load(p), "read payload")
+                stats = self._with_retry(
+                    lambda p=os.path.join(d, f"leaf_{i:05d}.stats.npy"):
+                    np.load(p), "read stats")
                 import jax.numpy as jnp
                 t = s2fp8.S2FP8Tensor(
                     payload.view(jnp.float8_e5m2).reshape(info["shape"]),
                     jnp.float32(stats[0]), jnp.float32(stats[1]))
                 arr = np.asarray(s2fp8.dequantize(t)).astype(np.asarray(tmpl).dtype)
             else:
-                arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+                arr = self._with_retry(
+                    lambda p=os.path.join(d, f"leaf_{i:05d}.npy"):
+                    np.load(p), "read leaf")
             out.append(arr)
-        return jax.tree_util.tree_unflatten(treedef, out), step
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     def _gc(self):
-        steps = sorted(s for s in (
-            int(n.split("_")[1]) for n in os.listdir(self.dir)
-            if n.startswith("step_") and not n.endswith(".tmp")))
-        for s in steps[:-self.keep]:
+        for s in self._committed_steps()[:-self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -542,6 +542,25 @@ def merge_updates(bank: Dict[str, Any], updates: Dict[str, Any]
             for k in bank}
 
 
+def force_refresh(bank: Dict[str, Any]) -> Dict[str, Any]:
+    """Host-side forced refresh: set ``last = -1`` on every
+    cotangent-carrying site so each bootstrap-refreshes (EMA re-seeded
+    with d=0 — exactly the reset wanted after numeric distress) on its
+    next use.  Read-only operand-stats sites are left alone:
+    :func:`merge_updates` carries their INPUT entry forward, so a -1
+    planted there would never clear and the trainer's cold-start probe
+    would report a refresh every step.  The escalation ladder's rung 2
+    (training/guard.py docstring) calls this between steps."""
+    out = {}
+    for site, entry in bank.items():
+        if any("bwd" in d for d in entry):
+            out[site] = {d: dict(st, last=jnp.full_like(st["last"], -1.0))
+                         for d, st in entry.items()}
+        else:
+            out[site] = entry
+    return out
+
+
 def bookkeeping_last(bank: Dict[str, Any]) -> jnp.ndarray:
     """Every site-direction's last-refresh scalar, concatenated — the
     trainer's O(n_sites) cold-start probe (``min < 0`` => some site still

@@ -31,6 +31,8 @@ from repro.launch.mesh import (axis_sizes, make_host_mesh,
 from repro import obs
 from repro.optim import optimizers, schedules
 from repro.parallel import sharding as shd
+from repro.training import chaos as chaos_mod
+from repro.training import guard as guard_mod
 from repro.training.trainer import TrainLoop, make_train_step
 
 
@@ -87,6 +89,42 @@ def main():
                     help="carry per-site FP8 health metrics in the "
                          "StatsBank (requires --stats-refresh-every) and "
                          "drain them to --metrics-sink each refresh")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the in-step StepGuard (training/guard.py): "
+                         "non-finite loss/grad + grad-norm-spike "
+                         "sentinels reject bad updates in-trace and the "
+                         "loop escalates skip -> forced refresh -> "
+                         "snapshot rollback -> checkpoint restore")
+    ap.add_argument("--guard-spike-factor", type=float, default=10.0,
+                    help="trip when grad_norm exceeds this multiple of "
+                         "its accepted-step EMA")
+    ap.add_argument("--guard-warmup", type=int, default=8,
+                    help="accepted steps before the spike sentinel arms")
+    ap.add_argument("--guard-sat-threshold", type=float, default=0.0,
+                    help="trip when any StatsBank site's sat_frac "
+                         "telemetry exceeds this fraction (0 = off; "
+                         "needs --telemetry)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="push (params, opt, bank, guard) onto an "
+                         "in-memory snapshot ring every K clean steps — "
+                         "the escalation ladder's rollback target "
+                         "(0 = ring off)")
+    ap.add_argument("--snapshot-ring", type=int, default=4,
+                    help="snapshot ring depth")
+    ap.add_argument("--snapshot-compress", action="store_true",
+                    help="S2FP8-compress big snapshot leaves (~4x less "
+                         "host memory; rollback no longer bitwise)")
+    ap.add_argument("--watchdog-escalate-after", type=int, default=0,
+                    help="N consecutive watchdog trips trigger a "
+                         "proactive snapshot + watchdog_escalated event "
+                         "(0 = trips stay log-only)")
+    ap.add_argument("--chaos", default=None,
+                    help="deterministic fault injection spec "
+                         "(training/chaos.py), e.g. 'nan_grad@5x3,"
+                         "slow_step@12:0.5'; injectors: nan_grad, "
+                         "inf_loss, reject, saturating_bank, "
+                         "corrupt_ckpt, slow_step, corrupt_batch. "
+                         "Implies --guard.")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -128,11 +166,27 @@ def main():
         (obs.ConsoleSink() if args.telemetry else None)
     telemetry = (obs.Telemetry(sink, every=args.stats_refresh_every)
                  if args.telemetry else None)
+    chaos_plan = chaos_mod.ChaosPlan.parse(args.chaos) if args.chaos else None
+    use_guard = args.guard or chaos_plan is not None
+    if args.guard_sat_threshold > 0 and not args.telemetry:
+        raise SystemExit("--guard-sat-threshold reads the StatsBank's "
+                         "sat_frac telemetry leaves: add --telemetry "
+                         "(and --stats-refresh-every)")
+    guard_cfg = None
+    if use_guard:
+        guard_cfg = guard_mod.GuardConfig(
+            spike_factor=args.guard_spike_factor,
+            warmup=args.guard_warmup,
+            sat_threshold=args.guard_sat_threshold)
+        print(f"[train] step guard armed: spike x{guard_cfg.spike_factor} "
+              f"(warmup {guard_cfg.warmup}), sat_threshold "
+              f"{guard_cfg.sat_threshold}"
+              + (f", chaos: {args.chaos}" if chaos_plan else ""))
     step_fn = make_train_step(loss_fn, opt, sched, pol,
                               track_stats=args.track_stats,
                               stats=stats_cfg, mesh=mesh,
                               grad_sync_mode=args.grad_sync,
-                              telemetry=telemetry)
+                              telemetry=telemetry, guard=guard_cfg)
     if mesh is not None:
         n_shards = 1
         for a in ("pod", "data"):
@@ -177,11 +231,23 @@ def main():
                                        stats_cfg)
             print(f"[train] statsbank: {len(bank)} sites, refresh every "
                   f"{stats_cfg.refresh_every} steps, ema {stats_cfg.ema_decay}")
-        ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-        loop = TrainLoop(step_fn, params, opt_state, data_fn,
+        ckpt = None
+        if args.ckpt_dir:
+            ckpt = CheckpointManager(
+                args.ckpt_dir,
+                event_fn=(sink.emit if sink is not None else None))
+        loop = TrainLoop(step_fn, params, opt_state,
+                         chaos_mod.wrap_data_fn(data_fn, chaos_plan),
                          ckpt_manager=ckpt, ckpt_every=args.ckpt_every,
-                         stats_bank=bank, sink=sink)
-        if args.resume == "auto" and ckpt is not None and ckpt.latest_step():
+                         stats_bank=bank, sink=sink,
+                         guard_state=(guard_mod.init_state() if use_guard
+                                      else None),
+                         chaos=chaos_plan,
+                         snapshot_every=args.snapshot_every,
+                         snapshot_ring=args.snapshot_ring,
+                         snapshot_compress=args.snapshot_compress,
+                         watchdog_escalate_after=args.watchdog_escalate_after)
+        if args.resume == "auto" and ckpt is not None:
             loop.maybe_resume()
         history = loop.run(args.steps)
     if sink is not None:

@@ -255,16 +255,20 @@ def mesh_batch_specs(tree, mesh):
     return jax.tree_util.tree_map(spec, tree)
 
 
-def train_step_specs(batch, mesh, with_stats: bool = False):
+def train_step_specs(batch, mesh, with_stats: bool = False,
+                     with_guard: bool = False):
     """(in_specs, out_specs) for the mesh-native train step's shard_map.
 
     The step is data-parallel: params / optimizer state / StatsBank carry
-    / step counter are replicated (the ``resolve`` rule table maps every
-    param of the DP step to ``P()``; FSDP/TP spec resolution stays the
-    pjit launchers' job), the batch shards per :func:`mesh_batch_specs`,
-    and every output — post-sync params/opt/bank and psum'd metrics — is
-    replicated."""
-    carry = 3 if with_stats else 2          # params, opt_state[, bank]
+    / StepGuard carry / step counter are replicated (the ``resolve`` rule
+    table maps every param of the DP step to ``P()``; FSDP/TP spec
+    resolution stays the pjit launchers' job), the batch shards per
+    :func:`mesh_batch_specs`, and every output — post-sync
+    params/opt/bank/guard and psum'd metrics — is replicated.  The guard
+    carry rides after the bank: both are tiny scalar pytrees whose values
+    are identical on every shard (they integrate post-psum globals)."""
+    # params, opt_state[, bank][, guard]
+    carry = 2 + int(with_stats) + int(with_guard)
     in_specs = (P(),) * carry + (mesh_batch_specs(batch, mesh), P())
     out_specs = (P(),) * (carry + 1)        # carry + metrics
     return in_specs, out_specs

@@ -1,0 +1,271 @@
+"""StepGuard: in-step numerics sentinels + the snapshot ring they protect.
+
+The paper's premise is that S2FP8 trains *without* hand-tuned loss-scale
+knobs — but a single divergent step still poisons params, optimizer
+moments, AND the StatsBank EMAs (stale (alpha, beta) then mis-truncates
+every subsequent tensor).  The guard closes that loop in two halves:
+
+* **In-trace** (this module + trainer.py): a verdict evaluated inside the
+  jitted step from scalars the step already computes —
+
+    - non-finite loss / gradient (the global grad norm is NaN/Inf iff any
+      leaf is),
+    - global-grad-norm spike vs. a carried EMA (``guard_state``, a
+      two-scalar pytree riding the step carry exactly like the StatsBank),
+    - bank saturation read from PR 7's telemetry leaves (``sat_frac``),
+      fused into the trainer's existing bookkeeping ``min`` probe so the
+      steady-state jaxpr reduction budget is UNCHANGED (fp32 baseline + 1,
+      asserted in tests/test_resilience.py).
+
+  On a bad verdict :func:`reject_update` passes the pre-step trees through
+  a ``lax.cond`` select — bit-identical, no recompile, and mesh-global for
+  free because every input scalar is already post-psum/post-sync.
+
+* **Host-side** (:class:`SnapshotRing` + TrainLoop's escalation ladder):
+  skip step -> force a StatsBank refresh -> roll back to an in-memory
+  snapshot -> restore from checkpoint.  The ring keeps the last-good
+  (params, opt, bank, guard) on the HOST every k steps, optionally
+  S2FP8-compressed through the same codec the checkpoint manager uses.
+
+The wire diagram and the chaos spec grammar that exercises all of this
+live in kernels/README.md ("Resilience dataflow").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import s2fp8
+from repro.core import statsbank
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """In-step sentinel thresholds.
+
+    * ``spike_factor`` — trip when the (global) grad norm exceeds
+      ``spike_factor * EMA``; the EMA only integrates ACCEPTED steps, so a
+      rejected spike cannot drag the baseline up after it.
+    * ``ema_decay``    — grad-norm EMA decay (first accepted step seeds it).
+    * ``warmup``       — accepted steps before the spike sentinel arms
+      (early training legitimately moves the norm around).
+    * ``sat_threshold`` — trip when any bank site's ``sat_frac`` telemetry
+      leaf exceeds this fraction; 0 disables the sentinel (it needs a
+      telemetry-enabled StatsBank to have anything to read).  A saturation
+      trip rejects the param/optimizer update but NOT the bank: the
+      refresh that measured the saturation is the remedy, and discarding
+      it would wedge the guard in a reject loop.
+    """
+    spike_factor: float = 10.0
+    ema_decay: float = 0.9
+    warmup: int = 8
+    sat_threshold: float = 0.0
+
+    def __post_init__(self):
+        if self.spike_factor <= 1.0:
+            raise ValueError("guard spike_factor must be > 1")
+        if not (0.0 <= self.ema_decay < 1.0):
+            raise ValueError("guard ema_decay must be in [0, 1)")
+
+
+def init_state() -> Dict[str, jnp.ndarray]:
+    """Fresh guard carry: no grad-norm history, spike sentinel disarmed."""
+    return {"gnorm_ema": jnp.float32(0.0), "steps": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# bank probes — fused into the trainer's single bookkeeping reduction
+# ---------------------------------------------------------------------------
+
+def saturation_leaves(bank: Dict[str, Any]) -> Optional[jnp.ndarray]:
+    """Every site-direction's ``sat_frac`` telemetry scalar, concatenated
+    (None for a telemetry-off bank).  Mirrors
+    :func:`statsbank.bookkeeping_last`'s structure-agnostic walk."""
+    leaves = [jnp.ravel(st["sat_frac"]) for e in bank.values()
+              for st in e.values() if "sat_frac" in st]
+    if not leaves:
+        return None
+    return leaves[0] if len(leaves) == 1 else jnp.concatenate(leaves)
+
+
+def bank_probe(input_bank: Dict[str, Any], new_bank: Dict[str, Any],
+               sat_threshold: float
+               ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """``(cold_min, sat_margin)`` from ONE reduce_min.
+
+    The cold row reads the INPUT bank (did any site bootstrap-refresh
+    this step — the trainer's pre-existing probe); the saturation row
+    reads the NEW bank (the health the step just measured, so a forced
+    refresh clears the verdict the same step it lands).  Both rows pad to
+    a common length with +inf and reduce in a single ``jnp.min(axis=1)``
+    — the same one-reduction budget as the plain cold probe, which is
+    what keeps the fp32+1 jaxpr invariant intact with the guard enabled.
+    ``sat_margin`` is ``sat_threshold - max(sat_frac)``: negative means
+    some site saturates past the threshold.  None when the bank carries
+    no telemetry or the sentinel is disabled.
+    """
+    cold = statsbank.bookkeeping_last(input_bank)
+    sat = saturation_leaves(new_bank) if sat_threshold > 0 else None
+    if sat is None:
+        return jnp.min(cold), None
+    margin = jnp.float32(sat_threshold) - sat
+    n = max(cold.shape[0], margin.shape[0])
+
+    def pad(v):
+        if v.shape[0] == n:
+            return v
+        return jnp.concatenate(
+            [v, jnp.full((n - v.shape[0],), jnp.inf, jnp.float32)])
+
+    mins = jnp.min(jnp.stack([pad(cold), pad(margin)]), axis=1)
+    return mins[0], mins[1]
+
+
+# ---------------------------------------------------------------------------
+# verdict
+# ---------------------------------------------------------------------------
+
+def evaluate(cfg: GuardConfig, state: Dict[str, jnp.ndarray],
+             loss: jnp.ndarray, grad_norm: jnp.ndarray,
+             sat_margin: Optional[jnp.ndarray] = None,
+             force_reject: Optional[jnp.ndarray] = None
+             ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """One step's verdict: ``(flags, new_guard_state)``.
+
+    Every input is a scalar the step already computed (loss and grad norm
+    are post-psum/post-sync, so the verdict is mesh-global with no new
+    collectives); every check is elementwise — zero added reductions.
+
+    ``flags``:
+      * ``ok``        — accept the param/optimizer update
+      * ``ok_bank``   — accept the bank update (saturation exempted, see
+                        :class:`GuardConfig`)
+      * ``nonfinite`` / ``spike`` / ``sat`` / ``forced`` — the cause bits
+        the host ladder reads to pick its rung.
+
+    The carry only integrates accepted steps: on a rejected step the EMA
+    and the warmup counter pass through unchanged (a NaN grad norm never
+    touches the baseline; the step "didn't happen").
+    """
+    finite = jnp.logical_and(jnp.isfinite(loss), jnp.isfinite(grad_norm))
+    nonfinite = jnp.logical_not(finite)
+    armed = state["steps"] >= cfg.warmup
+    spike = jnp.logical_and(
+        jnp.logical_and(armed, finite),
+        grad_norm > cfg.spike_factor * state["gnorm_ema"])
+    sat = (sat_margin < 0.0) if sat_margin is not None else jnp.bool_(False)
+    forced = (force_reject if force_reject is not None
+              else jnp.bool_(False))
+    bad_numerics = jnp.logical_or(jnp.logical_or(nonfinite, spike), forced)
+    ok = jnp.logical_not(jnp.logical_or(bad_numerics, sat))
+    ok_bank = jnp.logical_not(bad_numerics)
+
+    # where() with the EMA fallback keeps a NaN grad_norm out of the
+    # arithmetic even before the ok-gate (NaN * 0 is still NaN)
+    gn_safe = jnp.where(finite, grad_norm, state["gnorm_ema"])
+    first = state["steps"] == 0
+    ema_next = jnp.where(
+        first, gn_safe,
+        cfg.ema_decay * state["gnorm_ema"] + (1.0 - cfg.ema_decay) * gn_safe)
+    new_state = {
+        "gnorm_ema": jnp.where(ok, ema_next, state["gnorm_ema"]),
+        "steps": state["steps"] + ok.astype(jnp.float32),
+    }
+    flags = {"ok": ok, "ok_bank": ok_bank, "nonfinite": nonfinite,
+             "spike": spike, "sat": sat, "forced": forced}
+    return flags, new_state
+
+
+def reject_update(ok: jnp.ndarray, new_tree: Any, old_tree: Any) -> Any:
+    """The in-trace rejection: ``lax.cond`` select between the candidate
+    and the pre-step tree.  Both branches are pure picks (no reductions,
+    nothing recomputed), so a rejected step passes params/opt/bank through
+    BIT-IDENTICALLY and the compiled program is the same either way."""
+    return jax.lax.cond(ok, lambda p: p[0], lambda p: p[1],
+                        (new_tree, old_tree))
+
+
+def flag_metrics(flags: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Verdict bits as f32 metric leaves (host reads ``guard_ok < 0.5``).
+    The inputs are already replicated-global scalars, so these need no
+    psum on the mesh path."""
+    return {f"guard_{k}": v.astype(jnp.float32) for k, v in flags.items()
+            if k != "ok_bank"}
+
+
+# ---------------------------------------------------------------------------
+# host-side snapshot ring (escalation ladder rung 3)
+# ---------------------------------------------------------------------------
+
+class _CompressedLeaf:
+    """Host-side S2FP8-compressed leaf: 1-byte payload + (alpha, beta)."""
+
+    __slots__ = ("payload", "alpha", "beta", "shape", "dtype")
+
+    def __init__(self, leaf: np.ndarray):
+        t = s2fp8.quantize(leaf)
+        self.payload = np.asarray(t.payload)
+        self.alpha = float(t.alpha)
+        self.beta = float(t.beta)
+        self.shape = leaf.shape
+        self.dtype = leaf.dtype
+
+    def decode(self) -> np.ndarray:
+        t = s2fp8.S2FP8Tensor(self.payload, jnp.float32(self.alpha),
+                              jnp.float32(self.beta))
+        return np.asarray(s2fp8.dequantize(t)).astype(self.dtype)
+
+
+class SnapshotRing:
+    """Last-good train state on the HOST, every k steps, bounded depth.
+
+    ``push(step, tree)`` device_gets the carry (mesh-agnostic logical
+    arrays, same as the checkpoint manager) and appends it; the ring keeps
+    the newest ``size`` entries.  ``compress=True`` routes big f32 leaves
+    through the S2FP8 codec (~4x smaller residency — the paper's format
+    reused as an in-memory codec); scalars/small/int leaves stay raw so
+    optimizer counters and bank bookkeeping restore bit-exact.  Note a
+    compressed rollback is NOT bitwise for the big leaves — leave it off
+    when the run must replay exactly (the default).
+    """
+
+    def __init__(self, size: int = 4, compress: bool = False):
+        if size < 1:
+            raise ValueError("snapshot ring size must be >= 1")
+        self.size = int(size)
+        self.compress = compress
+        self._ring: List[Tuple[int, Any]] = []
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def _encode(self, leaf: np.ndarray):
+        if (self.compress and leaf.dtype == np.float32
+                and leaf.size >= 4096 and leaf.ndim >= 2):
+            return _CompressedLeaf(leaf)
+        return leaf
+
+    @staticmethod
+    def _decode(leaf):
+        return leaf.decode() if isinstance(leaf, _CompressedLeaf) else leaf
+
+    def push(self, step: int, tree: Any) -> None:
+        host = [np.asarray(x) for x in
+                jax.device_get(jax.tree_util.tree_leaves(tree))]
+        treedef = jax.tree_util.tree_structure(tree)
+        leaves = [self._encode(x) for x in host]
+        self._ring.append((int(step), (treedef, leaves)))
+        if len(self._ring) > self.size:
+            del self._ring[:len(self._ring) - self.size]
+
+    def latest(self) -> Optional[Tuple[int, Any]]:
+        """Newest ``(step, tree)`` — the state ENTERING ``step`` — or None."""
+        if not self._ring:
+            return None
+        step, (treedef, leaves) = self._ring[-1]
+        return step, jax.tree_util.tree_unflatten(
+            treedef, [self._decode(x) for x in leaves])

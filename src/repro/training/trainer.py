@@ -41,7 +41,9 @@ from repro.core.policy import Policy
 from repro.obs import telemetry as obs_telemetry
 from repro.optim.optimizers import Optimizer, global_norm
 from repro.parallel import sharding as shd
+from repro.training import chaos as chaos_mod
 from repro.training import fault
+from repro.training import guard as guard_mod
 
 GRAD_SYNC_MODES = ("f32", "s2fp8")
 
@@ -54,7 +56,8 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     mesh=None, grad_sync_mode: str = "f32",
                     grad_sync_min_size: int = 1 << 16,
                     grad_sync_backend: Optional[str] = None,
-                    telemetry: Optional[obs_telemetry.Telemetry] = None):
+                    telemetry: Optional[obs_telemetry.Telemetry] = None,
+                    guard: Optional[guard_mod.GuardConfig] = None):
     """loss_fn(params, batch, policy) -> (loss, metrics_dict).
 
     * fp8_ls mode: loss scaled by policy.loss_scale before grad, grads
@@ -99,6 +102,28 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
       primitives, preserving the steady-state jaxpr invariant.  Under a
       mesh it runs on the replicated post-shard_map bank, so each step
       emits exactly once.
+    * guard: a ``training/guard.GuardConfig`` arms the in-step StepGuard —
+      the step grows a ``guard_state`` carry (after the bank when both are
+      on)::
+
+          (params, opt_state[, stats_state], guard_state, batch, step)
+              -> (params, opt_state[, stats_state], guard_state, metrics)
+
+      Non-finite loss/grad, grad-norm-spike-vs-EMA, and (with a
+      telemetry bank and ``sat_threshold > 0``) bank-saturation sentinels
+      evaluate on scalars the step already computes; a bad verdict
+      rejects the update in-trace via ``lax.cond`` (pre-step trees pass
+      through bit-identically, no recompile) and raises ``guard_*``
+      metric flags the TrainLoop escalation ladder acts on.  The
+      saturation probe FUSES into the bank's existing bookkeeping ``min``
+      (one ``[2, N]`` reduce), so the steady-state jaxpr reduction budget
+      is unchanged: fp32 baseline + 1 outside ``lax.cond``.  Build the
+      carry with ``guard.init_state()``.
+
+    A ``batch["_chaos"]`` entry (attached by ``training/chaos.py``'s
+    data_fn wrapper) is popped off the batch inside the step and drives
+    the in-trace fault injectors (NaN grads / Inf loss / forced reject)
+    as pure data — every schedule runs the identical compiled program.
 
     The numerics backend (ref jnp vs fused Pallas kernels) rides on the
     policy: ``policy.backend`` is validated at Policy construction and
@@ -208,69 +233,119 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
 
         return _reduce_metrics
 
-    def _finish(loss, metrics, grads, params, opt_state, step):
-        lr = schedule(step)
-        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
-        out = dict(metrics)
-        out["loss"] = loss
-        # grads are post-sync (replicated-global under a mesh), so the
-        # plain norm IS the global norm — no axis_name needed here.
-        out["grad_norm"] = global_norm(grads)
-        out["lr"] = lr
-        if track_stats:
-            probe = jax.tree_util.tree_leaves(grads)[-1]
-            out["probe_stats"] = s2fp8.tensor_stats(probe)
-        return new_params, new_opt, out
-
     def _build_step(int_div: int = 1):
         reduce_metrics = _make_reduce_metrics(int_div)
 
-        def train_step(params, opt_state, batch, step):
-            (loss, metrics), grads = jax.value_and_grad(
-                scaled_loss, has_aux=True)(params, batch)
+        def _core(params, opt_state, stats_state, guard_state, batch, step):
+            # the chaos schedule (if armed) rides the batch as int32
+            # scalars — popped here so loss_fn never sees it and every
+            # schedule traces to the same program
+            batch, chaos_fields = chaos_mod.split_batch(batch)
+            if stats_state is None:
+                (loss, metrics), grads = jax.value_and_grad(
+                    scaled_loss, has_aux=True)(params, batch)
+                new_bank = None
+            else:
+                def banked_loss(p, bank):
+                    with statsbank.bind(bank, step, stats):
+                        loss, metrics = loss_fn(p, batch, policy)
+                    return _scale_loss(loss), metrics
+
+                (loss, metrics), (grads, bank_cot) = jax.value_and_grad(
+                    banked_loss, argnums=(0, 1), has_aux=True)(params,
+                                                               stats_state)
+                new_bank = statsbank.merge_updates(stats_state, bank_cot)
             if scale != 1.0:
                 grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
                 loss = loss / scale
             grads = _sync(grads)
-            return _finish(_global(loss), reduce_metrics(metrics), grads,
-                           params, opt_state, step)
-
-        def train_step_with_stats(params, opt_state, stats_state, batch,
-                                  step):
-            def banked_loss(p, bank):
-                with statsbank.bind(bank, step, stats):
-                    loss, metrics = loss_fn(p, batch, policy)
-                return _scale_loss(loss), metrics
-
-            (loss, metrics), (grads, bank_cot) = jax.value_and_grad(
-                banked_loss, argnums=(0, 1), has_aux=True)(params,
-                                                           stats_state)
-            new_bank = statsbank.merge_updates(stats_state, bank_cot)
-            grads = _sync(grads)
             metrics = reduce_metrics(metrics)
-            # sites also refresh on bootstrap (last < 0), not just on
-            # cadence; one O(n_sites) min over the concatenated
-            # bookkeeping scalars — the single non-cond reduction the bank
-            # step adds (asserted in tests/test_statsbank.py::
-            # test_zero_stats_reductions_outside_cond).  bookkeeping_last
-            # is structure-agnostic: plain truncation sites and
-            # payload-GEMM nodes (qdot_train) alike.  The bank is
-            # replicated under the mesh (refreshes all-reduce their
-            # partials), so no psum is needed on the probe.
-            cold = statsbank.bookkeeping_last(stats_state)
-            metrics["stats_refreshed"] = jnp.maximum(
-                (step % stats.refresh_every == 0).astype(jnp.float32),
-                (jnp.min(cold) < 0).astype(jnp.float32))
-            if mesh is None:
+            loss = _global(loss)
+            # in-trace fault injection points: data-driven `where`s on the
+            # post-sync globals, so a fired injector perturbs exactly what
+            # the guard must catch and nothing else
+            loss = chaos_mod.inject_loss(chaos_fields, loss, step)
+            grads = chaos_mod.inject_grads(chaos_fields, grads, step)
+
+            sat_margin = None
+            if stats_state is not None:
+                # sites also refresh on bootstrap (last < 0), not just on
+                # cadence; one O(n_sites) min over the concatenated
+                # bookkeeping scalars — the single non-cond reduction the
+                # bank step adds (asserted in tests/test_statsbank.py::
+                # test_zero_stats_reductions_outside_cond).  With the
+                # guard's saturation sentinel armed the probe widens to a
+                # [2, N] stack (guard.bank_probe) — still ONE reduce_min.
+                # The bank is replicated under the mesh (refreshes
+                # all-reduce their partials), so no psum is needed here.
+                thresh = guard.sat_threshold if guard is not None else 0.0
+                cold_min, sat_margin = guard_mod.bank_probe(
+                    stats_state, new_bank, thresh)
+                metrics["stats_refreshed"] = jnp.maximum(
+                    (step % stats.refresh_every == 0).astype(jnp.float32),
+                    (cold_min < 0).astype(jnp.float32))
+
+            lr = schedule(step)
+            # the candidate update is computed UNconditionally (its clip
+            # reductions stay outside lax.cond, matching the fp32
+            # baseline's count); the guard's cond below is a pure select
+            new_params, new_opt = optimizer.update(grads, opt_state,
+                                                   params, lr)
+            out = dict(metrics)
+            out["loss"] = loss
+            # grads are post-sync (replicated-global under a mesh), so the
+            # plain norm IS the global norm — no axis_name needed here.
+            out["grad_norm"] = global_norm(grads)
+            out["lr"] = lr
+            if track_stats:
+                probe = jax.tree_util.tree_leaves(grads)[-1]
+                out["probe_stats"] = s2fp8.tensor_stats(probe)
+
+            new_guard = None
+            if guard is not None:
+                flags, new_guard = guard_mod.evaluate(
+                    guard, guard_state, loss, out["grad_norm"], sat_margin,
+                    chaos_mod.forced_reject(chaos_fields, step))
+                new_params, new_opt = guard_mod.reject_update(
+                    flags["ok"], (new_params, new_opt),
+                    (params, opt_state))
+                if new_bank is not None:
+                    new_bank = guard_mod.reject_update(
+                        flags["ok_bank"], new_bank, stats_state)
+                out.update(guard_mod.flag_metrics(flags))
+            if new_bank is not None and mesh is None:
                 # mesh path drains AFTER shard_map (replicated bank, one
                 # callback) — see sharded_step
                 _drain_telemetry(new_bank, step)
-            new_params, new_opt, out = _finish(_global(loss), metrics,
-                                               grads, params, opt_state,
-                                               step)
-            return new_params, new_opt, new_bank, out
+            return new_params, new_opt, new_bank, new_guard, out
 
-        return train_step if stats is None else train_step_with_stats
+        if stats is None and guard is None:
+            def train_step(params, opt_state, batch, step):
+                p, o, _, _, out = _core(params, opt_state, None, None,
+                                        batch, step)
+                return p, o, out
+            return train_step
+        if stats is None:
+            def train_step_guarded(params, opt_state, guard_state, batch,
+                                   step):
+                p, o, _, g, out = _core(params, opt_state, None,
+                                        guard_state, batch, step)
+                return p, o, g, out
+            return train_step_guarded
+        if guard is None:
+            def train_step_with_stats(params, opt_state, stats_state,
+                                      batch, step):
+                p, o, b, _, out = _core(params, opt_state, stats_state,
+                                        None, batch, step)
+                return p, o, b, out
+            return train_step_with_stats
+
+        def train_step_with_stats_guarded(params, opt_state, stats_state,
+                                          guard_state, batch, step):
+            p, o, b, g, out = _core(params, opt_state, stats_state,
+                                    guard_state, batch, step)
+            return p, o, b, g, out
+        return train_step_with_stats_guarded
 
     if mesh is None:
         return _build_step()
@@ -299,7 +374,8 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
 
             bodies[int_div] = local_body
         in_specs, out_specs = shd.train_step_specs(
-            batch, mesh, with_stats=stats is not None)
+            batch, mesh, with_stats=stats is not None,
+            with_guard=guard is not None)
         out = shard_map(bodies[int_div], mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs, check_rep=False)(*args)
         if stats is not None:
@@ -317,12 +393,12 @@ def make_eval_step(loss_fn: Callable, policy: Policy):
 
 
 class TrainLoop:
-    """Host-side loop: prefetch, checkpoint-every-k, auto-resume, watchdog.
+    """Host-side loop: prefetch, checkpoint-every-k, auto-resume, watchdog,
+    and the resilience escalation ladder.
 
     Single-host here (1 or N local devices — the mesh-native step from
     ``make_train_step(mesh=...)`` drops in unchanged; jit lays the batch
-    out per the step's shard_map specs); the multi-host story is in
-    training/fault.py.
+    out per the step's shard_map specs).
 
     ``stats_bank``: the StatsBank carry for a step built with
     ``make_train_step(..., stats=...)``.  It is checkpointed alongside
@@ -331,67 +407,189 @@ class TrainLoop:
     Checkpoints gather sharded leaves to host (checkpoint/manager.py), so
     a carry saved from an N-device mesh restores on any device count.
 
+    ``guard_state``: the StepGuard carry for a step built with
+    ``make_train_step(..., guard=...)``.  When the step's ``guard_ok``
+    metric reports a trip (the update was already rejected IN-TRACE), the
+    loop walks the escalation ladder, one rung per CONSECUTIVE trip:
+
+        1. skip        — the rejection is the whole intervention
+        2. force a StatsBank refresh (``statsbank.force_refresh``: every
+           site bootstrap-refreshes next step, EMA re-seeded)
+        3. roll back   — restore the newest :class:`guard.SnapshotRing`
+           entry and rewind the step counter (deterministic data makes the
+           replay exact; chaos injections are single-fire, so a replayed
+           fault step runs clean)
+        4. restore the newest VALID checkpoint (the manager quarantines
+           corrupt ones on the way)
+
+    Inapplicable rungs collapse (no bank -> 2 skipped; empty ring -> 3
+    falls through to 4; no checkpoint -> keep skipping).  A clean step
+    resets the rung.  Every intervention is emitted through ``sink`` as a
+    structured event: ``guard_tripped``, ``stats_refresh_forced``,
+    ``rollback``, ``checkpoint_restore`` (plus the manager's
+    ``checkpoint_quarantined``).  ``max_interventions`` bounds a
+    persistently-faulting run (RuntimeError instead of a silent loop).
+
+    ``snapshot_every=k`` pushes (params, opt[, bank][, guard]) onto an
+    in-memory :class:`guard.SnapshotRing` after every k-th clean step
+    (``snapshot_compress=True`` routes big leaves through the S2FP8
+    codec; lossy — leave off when replays must be bitwise).
+
+    ``chaos``: a ``training/chaos.ChaosPlan`` — the loop calls its
+    host-side hooks (bank mutation before the step, straggler sleep
+    inside the timed span, checkpoint corruption after a save); the
+    in-trace schedule must additionally ride the batch via
+    ``chaos.wrap_data_fn``.
+
+    ``watchdog_escalate_after=N``: N consecutive watchdog trips push a
+    proactive snapshot and emit ``watchdog_escalated`` (0 disables; trips
+    stay log-only).
+
     ``sink``: a ``repro.obs.MetricsSink`` receiving the loop's records —
     per-step ``"train_step"`` lines with span timings (data / device-
     sync'd step / checkpoint / refresh wall-clock) and ``"event"``
-    records (watchdog trips, checkpoint saves).  Defaults to a
-    ``ConsoleSink`` over ``run``'s ``print_fn``, which reproduces the
-    historical log lines.
+    records (watchdog trips, checkpoint saves, ladder interventions).
+    Defaults to a ``ConsoleSink`` over ``run``'s ``print_fn``, which
+    reproduces the historical log lines.
     """
 
     def __init__(self, train_step, params, opt_state, data_fn,
                  ckpt_manager=None, ckpt_every: int = 0,
                  log_every: int = 10, watchdog_factor: float = 3.0,
-                 stats_bank=None, sink=None):
-        donate = (0, 1) if stats_bank is None else (0, 1, 2)
+                 stats_bank=None, sink=None, guard_state=None,
+                 chaos=None, snapshot_every: int = 0,
+                 snapshot_ring: int = 4, snapshot_compress: bool = False,
+                 watchdog_escalate_after: int = 0,
+                 max_interventions: int = 32):
+        donate = tuple(range(2 + (stats_bank is not None)
+                             + (guard_state is not None)))
         self.train_step = jax.jit(train_step, donate_argnums=donate)
         self.params = params
         self.opt_state = opt_state
         self.stats_bank = stats_bank
+        self.guard_state = guard_state
         self.data_fn = data_fn
         self.ckpt = ckpt_manager
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.watchdog_factor = watchdog_factor
+        self.watchdog_escalate_after = watchdog_escalate_after
+        self.chaos = chaos
+        self.snapshot_every = snapshot_every
+        self.ring = (guard_mod.SnapshotRing(snapshot_ring,
+                                            compress=snapshot_compress)
+                     if snapshot_every else None)
+        self.max_interventions = max_interventions
         self.sink = sink
         self.start_step = 0
         self.history = []
 
+    # -- state tree plumbing ------------------------------------------------
+    def _state_tree(self):
+        """(params, opt[, bank][, guard]) — the checkpoint/snapshot unit."""
+        tree = [self.params, self.opt_state]
+        if self.stats_bank is not None:
+            tree.append(self.stats_bank)
+        if self.guard_state is not None:
+            tree.append(self.guard_state)
+        return tuple(tree)
+
+    def _load_state(self, tree):
+        tree = list(tree)
+        self.params, self.opt_state = tree[0], tree[1]
+        i = 2
+        if self.stats_bank is not None:
+            self.stats_bank = tree[i]
+            i += 1
+        if self.guard_state is not None:
+            self.guard_state = tree[i]
+
     def _ckpt_tree(self):
-        if self.stats_bank is None:
-            return (self.params, self.opt_state)
-        return (self.params, self.opt_state, self.stats_bank)
+        return self._state_tree()
+
+    def _step_once(self, batch, step):
+        args = [self.params, self.opt_state]
+        if self.stats_bank is not None:
+            args.append(self.stats_bank)
+        if self.guard_state is not None:
+            args.append(self.guard_state)
+        out = self.train_step(*args, batch, jnp.int32(step))
+        out = list(out)
+        self.params, self.opt_state = out[0], out[1]
+        i = 2
+        if self.stats_bank is not None:
+            self.stats_bank = out[i]
+            i += 1
+        if self.guard_state is not None:
+            self.guard_state = out[i]
+            i += 1
+        return out[i]                        # metrics
 
     def maybe_resume(self):
         if self.ckpt is None:
             return
-        latest = self.ckpt.latest_step()
-        if latest is not None:
-            restored, _ = self.ckpt.restore(self._ckpt_tree(), latest)
-            if self.stats_bank is None:
-                self.params, self.opt_state = restored
-            else:
-                self.params, self.opt_state, self.stats_bank = restored
-            self.start_step = latest
-            print(f"[trainer] resumed from step {latest}")
+        try:
+            # step=None walks newest -> oldest, quarantining corrupt dirs
+            restored, latest = self.ckpt.restore(self._ckpt_tree())
+        except FileNotFoundError:
+            return
+        self._load_state(restored)
+        self.start_step = latest
+        print(f"[trainer] resumed from step {latest}")
+
+    # -- escalation ladder ---------------------------------------------------
+    def _escalate(self, step: int, trips: int, sink) -> int:
+        """One rung per consecutive trip; returns the next step to run
+        (<= step means a rewind happened)."""
+        if trips == 1:
+            return step + 1                 # the in-trace rejection IS rung 1
+        if trips == 2 and self.stats_bank is not None:
+            self.stats_bank = statsbank.force_refresh(self.stats_bank)
+            sink.emit({"kind": "event", "event": "stats_refresh_forced",
+                       "step": step})
+            return step + 1
+        snap = self.ring.latest() if self.ring is not None else None
+        if snap is not None:
+            snap_step, tree = snap
+            self._load_state(tree)
+            sink.emit({"kind": "event", "event": "rollback", "step": step,
+                       "to_step": snap_step,
+                       "compressed": self.ring.compress})
+            return snap_step
+        if self.ckpt is not None:
+            try:
+                restored, s = self.ckpt.restore(self._ckpt_tree())
+            except FileNotFoundError:
+                return step + 1
+            self._load_state(restored)
+            sink.emit({"kind": "event", "event": "checkpoint_restore",
+                       "step": step, "to_step": s})
+            return s
+        return step + 1
 
     def run(self, steps: int, print_fn=print):
         import time
         from repro.obs.sinks import ConsoleSink
         sink = self.sink if self.sink is not None else ConsoleSink(print_fn)
         watchdog = fault.Watchdog(self.watchdog_factor)
-        for step in range(self.start_step, steps):
+        wd_consecutive = 0
+        trips = 0                # consecutive guard trips = ladder rung
+        interventions = 0
+        step = self.start_step
+        while step < steps:
             t_fetch = time.perf_counter()
             batch = self.data_fn(step)
             data_s = time.perf_counter() - t_fetch
+            if self.chaos is not None:
+                mutated = self.chaos.mutate_bank(step, self.stats_bank)
+                if mutated is not None:
+                    self.stats_bank = mutated
             t0 = time.perf_counter()
-            if self.stats_bank is None:
-                self.params, self.opt_state, metrics = self.train_step(
-                    self.params, self.opt_state, batch, jnp.int32(step))
-            else:
-                self.params, self.opt_state, self.stats_bank, metrics = \
-                    self.train_step(self.params, self.opt_state,
-                                    self.stats_bank, batch, jnp.int32(step))
+            if self.chaos is not None:
+                # straggler injection lands INSIDE the timed span so the
+                # watchdog sees it
+                self.chaos.maybe_sleep(step)
+            metrics = self._step_once(batch, step)
             # device-sync the span: the step dispatches asynchronously, so
             # wall-clock without the barrier measures dispatch, not compute
             jax.block_until_ready((self.params, metrics))
@@ -403,7 +601,48 @@ class TrainLoop:
             if event is not None:
                 sink.emit({"kind": "event", "event": "watchdog",
                            "step": step, **event})
+                wd_consecutive += 1
+                if self.watchdog_escalate_after and \
+                        wd_consecutive >= self.watchdog_escalate_after:
+                    if self.ring is not None:
+                        self.ring.push(step + 1, self._state_tree())
+                    sink.emit({"kind": "event", "event": "watchdog_escalated",
+                               "step": step, "trips": wd_consecutive,
+                               "snapshot": self.ring is not None})
+                    wd_consecutive = 0
+            else:
+                wd_consecutive = 0
             self.history.append(metrics)
+            tripped = (self.guard_state is not None
+                       and metrics.get("guard_ok", 1.0) < 0.5)
+            if tripped:
+                trips += 1
+                interventions += 1
+                cause = ",".join(c for c in ("nonfinite", "spike", "sat",
+                                             "forced")
+                                 if metrics.get(f"guard_{c}", 0.0) >= 0.5)
+                sink.emit({"kind": "event", "event": "guard_tripped",
+                           "step": step, "trip": trips,
+                           "cause": cause or "unknown",
+                           "loss": metrics.get("loss"),
+                           "grad_norm": metrics.get("grad_norm")})
+                if interventions > self.max_interventions:
+                    sink.flush()
+                    raise RuntimeError(
+                        f"StepGuard: {interventions} interventions without "
+                        f"recovery (last trip at step {step}, cause "
+                        f"{cause or 'unknown'}) — giving up")
+                next_step = self._escalate(step, trips, sink)
+                if next_step <= step:
+                    trips = 0               # rewound: the ladder restarts
+                step = next_step
+                continue
+            trips = 0
+            if self.ring is not None and self.snapshot_every and \
+                    (step + 1) % self.snapshot_every == 0:
+                # the state ENTERING step+1 — last-good by construction
+                # (this step just passed the guard)
+                self.ring.push(step + 1, self._state_tree())
             t1 = time.perf_counter()
             saved = False
             if self.ckpt is not None and self.ckpt_every and \
@@ -416,6 +655,12 @@ class TrainLoop:
                            "step": step + 1, "blocking_s": ckpt_s,
                            "write_s": getattr(self.ckpt,
                                               "last_write_seconds", 0.0)})
+            if self.chaos is not None and self.ckpt is not None:
+                damage = self.chaos.corrupt_checkpoint(step, self.ckpt)
+                if damage is not None:
+                    sink.emit({"kind": "event",
+                               "event": "chaos_corrupt_ckpt",
+                               "step": step, **damage})
             if self.log_every and step % self.log_every == 0:
                 refreshed = bool(metrics.get("stats_refreshed", 0.0))
                 sink.emit({"kind": "train_step", "step": step,
@@ -424,6 +669,7 @@ class TrainLoop:
                            "data_ms": data_s * 1e3, "step_ms": dt * 1e3,
                            "ckpt_ms": ckpt_s * 1e3 if saved else 0.0,
                            "refresh_ms": dt * 1e3 if refreshed else 0.0})
+            step += 1
         if self.ckpt is not None:
             self.ckpt.wait()
         sink.flush()

@@ -65,8 +65,11 @@ def loss_fn(params, batch, pol):
     return jnp.mean(jnp.sum(y * batch["t"], axis=-1)), {}
 
 
-def setup(mesh=None, grad_sync_mode="f32", telemetry=False):
-    """(step_fn, params, opt_state, bank, stats_cfg) for the toy."""
+def setup(mesh=None, grad_sync_mode="f32", telemetry=False, guard=None):
+    """(step_fn, params, opt_state, bank, stats_cfg) for the toy.
+    ``guard``: a ``training/guard.GuardConfig`` — the returned step then
+    takes/returns the extra guard carry (build it with
+    ``guard.init_state()``)."""
     from repro.core import statsbank
     from repro.core.policy import make_policy
     from repro.optim import optimizers, schedules
@@ -80,7 +83,7 @@ def setup(mesh=None, grad_sync_mode="f32", telemetry=False):
     bank = statsbank.init_bank(loss_fn, params, make_batch(0), pol, cfg)
     step_fn = make_train_step(loss_fn, opt, schedules.constant(LR), pol,
                               stats=cfg, mesh=mesh,
-                              grad_sync_mode=grad_sync_mode)
+                              grad_sync_mode=grad_sync_mode, guard=guard)
     return jax.jit(step_fn), params, opt.init(params), bank, cfg
 
 

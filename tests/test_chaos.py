@@ -1,0 +1,398 @@
+"""Chaos harness suite: the spec grammar, the single-fire contract, the
+host-side hooks, the in-trace injectors, and the end-to-end matrix the
+ISSUE's acceptance criteria name.
+
+Fast lane: parser/injector units plus two toy-scale TrainLoop runs that
+drive the full escalation ladder (skip -> forced refresh -> rollback)
+and prove the acceptance property at toy scale — a ``nan_grad`` run and
+a ``reject`` run with the same schedule end bitwise-identical, because
+in-trace injection is data (``batch["_chaos"]``), not program.
+
+Slow lane (``-m slow``): the transformer_tiny chaos matrix through the
+real launcher — every injector finishes with a finite loss and emits its
+expected event chain, ``--resume auto`` survives a corrupted newest
+checkpoint, and the nan-vs-reject bitwise acceptance holds at model
+scale (compared via the checkpoints' CRC32 manifests).
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mesh_toy
+from repro.checkpoint.manager import CheckpointManager
+from repro.obs import sinks as obs_sinks
+from repro.training import chaos as chaos_mod
+from repro.training import guard as guard_mod
+from repro.training.trainer import TrainLoop
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+_TESTS = os.path.dirname(__file__)
+
+
+def _subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([_SRC, _TESTS])
+    return env
+
+
+def _assert_trees_bitwise(a, b, msg=""):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (pa, xa), (_, xb) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(xa), np.asarray(xb),
+            err_msg=f"{msg} leaf {jax.tree_util.keystr(pa)}")
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_grammar():
+    evs = chaos_mod.parse_spec(
+        "nan_grad@5x3, slow_step@12:0.5, corrupt_ckpt@10:bitflip,")
+    assert [(e.name, e.step, e.param) for e in evs] == [
+        ("nan_grad", 5, None), ("nan_grad", 6, None), ("nan_grad", 7, None),
+        ("slow_step", 12, "0.5"), ("corrupt_ckpt", 10, "bitflip")]
+    assert chaos_mod.parse_spec("") == []
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("bogus@3", "unknown chaos injector"),
+    ("nan_grad", "expected name@step"),
+    ("nan_grad@5x0", "count must be"),
+    ("nan_grad@-1", "step must be"),
+])
+def test_parse_spec_rejects(bad, match):
+    with pytest.raises(ValueError, match=match):
+        chaos_mod.parse_spec(bad)
+
+
+def test_has_in_trace():
+    assert chaos_mod.ChaosPlan.parse("reject@1").has_in_trace()
+    assert not chaos_mod.ChaosPlan.parse("slow_step@1").has_in_trace()
+
+
+# ---------------------------------------------------------------------------
+# single-fire + the in-trace channel
+# ---------------------------------------------------------------------------
+
+def test_batch_fields_single_fire_and_constant_structure():
+    plan = chaos_mod.ChaosPlan.parse("nan_grad@2")
+    f = plan.batch_fields(2)
+    assert set(f) == set(chaos_mod.IN_TRACE)   # always ALL keys: no recompile
+    assert int(f["nan_grad"]) == 2
+    assert int(f["inf_loss"]) == -1 and int(f["reject"]) == -1
+    # spent: a rollback replaying step 2 sees a clean schedule
+    f2 = plan.batch_fields(2)
+    assert all(int(v) == -1 for v in f2.values())
+
+
+def test_wrap_data_fn_off_is_identity():
+    data_fn = lambda s: {"x": jnp.zeros((2,))}
+    assert chaos_mod.wrap_data_fn(data_fn, None) is data_fn
+
+
+def test_wrap_data_fn_attaches_schedule_and_split_pops_it():
+    plan = chaos_mod.ChaosPlan.parse("inf_loss@1")
+    fn = chaos_mod.wrap_data_fn(lambda s: {"x": jnp.ones((2,))}, plan)
+    batch = fn(1)
+    assert int(batch["_chaos"]["inf_loss"]) == 1
+    clean, chaos = chaos_mod.split_batch(batch)
+    assert "_chaos" not in clean and int(chaos["inf_loss"]) == 1
+    # non-dict / schedule-free batches pass through
+    arr = jnp.zeros((2,))
+    assert chaos_mod.split_batch(arr) == (arr, None)
+    assert chaos_mod.split_batch({"x": arr})[1] is None
+
+
+def test_injectors_fire_only_on_their_step():
+    chaos = {"nan_grad": jnp.int32(3), "inf_loss": jnp.int32(3),
+             "reject": jnp.int32(3)}
+    loss = jnp.float32(1.5)
+    grads = {"w": jnp.ones((4,))}
+    assert np.isinf(chaos_mod.inject_loss(chaos, loss, jnp.int32(3)))
+    assert float(chaos_mod.inject_loss(chaos, loss, jnp.int32(4))) == 1.5
+    g3 = chaos_mod.inject_grads(chaos, grads, jnp.int32(3))
+    assert np.isnan(np.asarray(g3["w"])).all()
+    g4 = chaos_mod.inject_grads(chaos, grads, jnp.int32(4))
+    np.testing.assert_array_equal(np.asarray(g4["w"]), np.ones((4,)))
+    assert bool(chaos_mod.forced_reject(chaos, jnp.int32(3)))
+    assert not bool(chaos_mod.forced_reject(chaos, jnp.int32(4)))
+    # chaos-off step: injectors are no-ops returning the input
+    assert chaos_mod.inject_loss(None, loss, jnp.int32(3)) is loss
+    assert chaos_mod.forced_reject(None, jnp.int32(3)) is None
+
+
+# ---------------------------------------------------------------------------
+# host-side hooks
+# ---------------------------------------------------------------------------
+
+def test_corrupt_batch_garbles_by_dtype():
+    plan = chaos_mod.ChaosPlan.parse("corrupt_batch@1")
+    batch = {"x": jnp.ones((3,), jnp.float32), "n": jnp.ones((3,), jnp.int32)}
+    out = plan.corrupt_batch(1, batch)
+    assert np.isnan(np.asarray(out["x"])).all()
+    assert (np.asarray(out["n"]) == 0).all()
+    assert plan.corrupt_batch(1, batch) is batch      # spent
+
+
+def test_mutate_bank_pins_sat_frac():
+    plan = chaos_mod.ChaosPlan.parse("saturating_bank@4")
+    bank = {"s": {"fwd": {"last": jnp.float32(2.0),
+                          "sat_frac": jnp.float32(0.1)}}}
+    out = plan.mutate_bank(4, bank)
+    assert float(out["s"]["fwd"]["sat_frac"]) == 1.0
+    assert float(out["s"]["fwd"]["last"]) == 2.0      # bookkeeping untouched
+    assert plan.mutate_bank(4, bank) is None          # spent
+
+
+def test_mutate_bank_none_without_telemetry():
+    plan = chaos_mod.ChaosPlan.parse("saturating_bank@4")
+    assert plan.mutate_bank(4, {"s": {"fwd": {"last": jnp.float32(2.0)}}}) \
+        is None
+    assert chaos_mod.ChaosPlan.parse("saturating_bank@4").mutate_bank(
+        4, None) is None
+
+
+def test_sleep_s_param_and_default():
+    plan = chaos_mod.ChaosPlan.parse("slow_step@3:0.25,slow_step@4")
+    assert plan.sleep_s(3) == 0.25
+    assert plan.sleep_s(3) == 0.0                     # spent
+    assert plan.sleep_s(4) == 0.75                    # grammar default
+    assert plan.sleep_s(5) == 0.0
+
+
+@pytest.mark.parametrize("flavor,reason", [
+    ("truncate", "size mismatch"),
+    ("bitflip", "checksum mismatch"),
+    ("manifest", "missing manifest"),
+])
+def test_corrupt_checkpoint_flavors_defeat_validation(tmp_path, flavor,
+                                                      reason):
+    ck = CheckpointManager(str(tmp_path))
+    plan = chaos_mod.ChaosPlan.parse(f"corrupt_ckpt@0:{flavor}")
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    ck.save(3, tree)
+    out = plan.corrupt_checkpoint(0, ck)
+    assert out is not None and out["ckpt_step"] == 3
+    assert out["flavor"] == flavor
+    ok, why = ck.validate(3)
+    assert not ok and reason in why, (ok, why)
+
+
+def test_corrupt_checkpoint_none_when_nothing_on_disk(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    plan = chaos_mod.ChaosPlan.parse("corrupt_ckpt@0")
+    assert plan.corrupt_checkpoint(0, ck) is None
+    # the event is spent even though there was nothing to damage
+    ck.save(1, {"w": jnp.zeros((2,))})
+    assert plan.corrupt_checkpoint(0, ck) is None
+
+
+# ---------------------------------------------------------------------------
+# toy-scale end-to-end: the full ladder, then the bitwise acceptance
+# ---------------------------------------------------------------------------
+
+def _toy_guarded_run(spec, steps=10, snapshot_every=2):
+    plan = chaos_mod.ChaosPlan.parse(spec)
+    step, params, opt_state, bank, _ = mesh_toy.setup(
+        guard=guard_mod.GuardConfig())
+    sink = obs_sinks.MemorySink()
+    loop = TrainLoop(step, params, opt_state,
+                     chaos_mod.wrap_data_fn(
+                         lambda s: mesh_toy.make_batch(s), plan),
+                     stats_bank=bank, guard_state=guard_mod.init_state(),
+                     chaos=plan, sink=sink, log_every=0,
+                     snapshot_every=snapshot_every)
+    loop.run(steps)
+    return loop, sink
+
+
+def test_ladder_walks_skip_refresh_rollback():
+    loop, sink = _toy_guarded_run("reject@5x3")
+    events = sink.by_kind("event")
+    trips = [r for r in events if r["event"] == "guard_tripped"]
+    assert [(r["step"], r["trip"], r["cause"]) for r in trips] == [
+        (5, 1, "forced"), (6, 2, "forced"), (7, 3, "forced")]
+    refreshes = [r for r in events if r["event"] == "stats_refresh_forced"]
+    assert [r["step"] for r in refreshes] == [6]
+    rollbacks = [r for r in events if r["event"] == "rollback"]
+    assert len(rollbacks) == 1
+    assert rollbacks[0]["step"] == 7 and rollbacks[0]["to_step"] == 4
+    assert rollbacks[0]["compressed"] is False
+    # the rewound schedule replays CLEAN (single-fire) and finishes
+    assert all(np.isfinite(m["loss"]) for m in loop.history)
+    # 5 clean (0..4) + 3 tripped (5..7) + 6 replayed clean (4..9)
+    assert len(loop.history) == 14
+
+
+def test_nan_grad_and_reject_runs_end_bitwise_equal():
+    """The acceptance property: in-trace injection is batch DATA on one
+    shared executable, and a rejected step is a pure lax.cond pick — so a
+    nan_grad run and a reject run with the same schedule walk the same
+    ladder and end in bitwise-identical state."""
+    loop_a, sink_a = _toy_guarded_run("nan_grad@5x3")
+    loop_b, sink_b = _toy_guarded_run("reject@5x3")
+
+    def trip_steps(sink):
+        return [(r["step"], r["trip"]) for r in sink.by_kind("event")
+                if r["event"] == "guard_tripped"]
+
+    assert trip_steps(sink_a) == trip_steps(sink_b) == [(5, 1), (6, 2),
+                                                        (7, 3)]
+    causes = {r["cause"] for r in sink_a.by_kind("event")
+              if r["event"] == "guard_tripped"}
+    assert causes == {"nonfinite"}            # NaN grads -> NaN grad_norm
+    _assert_trees_bitwise(
+        (loop_a.params, loop_a.opt_state, loop_a.stats_bank,
+         loop_a.guard_state),
+        (loop_b.params, loop_b.opt_state, loop_b.stats_bank,
+         loop_b.guard_state),
+        "nan-vs-reject")
+
+
+def test_inf_loss_trips_nonfinite_at_toy_scale():
+    loop, sink = _toy_guarded_run("inf_loss@4", steps=8)
+    trips = [r for r in sink.by_kind("event") if r["event"] == "guard_tripped"]
+    assert [(r["step"], r["cause"]) for r in trips] == [(4, "nonfinite")]
+    assert all(np.isfinite(m["loss"]) for m in loop.history[-3:])
+
+
+# ---------------------------------------------------------------------------
+# transformer_tiny chaos matrix through the real launcher (slow lane)
+# ---------------------------------------------------------------------------
+
+def _launch(tmp_path, name, extra, timeout=900):
+    jsonl = str(tmp_path / f"{name}.jsonl")
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "transformer_tiny", "--reduced", "--mesh", "none",
+           "--metrics-sink", f"jsonl:{jsonl}"] + extra
+    proc = subprocess.run(cmd, env=_subprocess_env(), capture_output=True,
+                          text=True, timeout=timeout)
+    assert proc.returncode == 0, \
+        proc.stdout[-2000:] + "\n--- stderr ---\n" + proc.stderr[-3000:]
+    m = re.search(r"final loss ([-+0-9.einfa]+)", proc.stdout)
+    assert m, proc.stdout[-2000:]
+    with open(jsonl) as f:
+        records = [json.loads(line) for line in f]
+    events = [r for r in records if r.get("kind") == "event"]
+    return float(m.group(1)), events, proc.stdout
+
+
+def _named(events, name):
+    return [e for e in events if e["event"] == name]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("injector", ["nan_grad", "inf_loss"])
+def test_matrix_nonfinite_injectors_recover(tmp_path, injector):
+    final, events, _ = _launch(tmp_path, injector, [
+        "--steps", "12", "--chaos", f"{injector}@5x3",
+        "--snapshot-every", "4", "--stats-refresh-every", "4"])
+    assert np.isfinite(final)
+    trips = _named(events, "guard_tripped")
+    assert [(e["step"], e["trip"]) for e in trips] == [(5, 1), (6, 2),
+                                                       (7, 3)]
+    assert all(e["cause"] == "nonfinite" for e in trips)
+    assert [e["step"] for e in _named(events, "stats_refresh_forced")] == [6]
+    rb = _named(events, "rollback")
+    assert len(rb) == 1 and rb[0]["to_step"] == 4
+
+
+@pytest.mark.slow
+def test_matrix_saturating_bank_forces_refresh(tmp_path):
+    final, events, _ = _launch(tmp_path, "sat", [
+        "--steps", "12", "--chaos", "saturating_bank@6",
+        "--stats-refresh-every", "4", "--telemetry",
+        "--guard-sat-threshold", "0.5"])
+    assert np.isfinite(final)
+    trips = _named(events, "guard_tripped")
+    assert trips and all("sat" in e["cause"] for e in trips)
+    assert trips[0]["step"] == 6
+    # rung 2 is the designed remedy: force a refresh, verdict clears
+    assert _named(events, "stats_refresh_forced")
+    assert not _named(events, "rollback")
+
+
+@pytest.mark.slow
+def test_matrix_corrupt_ckpt_quarantine_and_restore(tmp_path):
+    d = str(tmp_path / "ckpt")
+    final, events, _ = _launch(tmp_path, "corrupt", [
+        "--steps", "14", "--chaos", "corrupt_ckpt@8:truncate,reject@9x3",
+        "--ckpt-dir", d, "--ckpt-every", "4", "--stats-refresh-every", "4"])
+    assert np.isfinite(final)
+    assert _named(events, "chaos_corrupt_ckpt")[0]["ckpt_step"] == 8
+    # rung 4 (no snapshot ring armed): restore walks past the damaged
+    # newest, quarantining it, onto the older valid step
+    q = _named(events, "checkpoint_quarantined")
+    assert len(q) == 1 and q[0]["step"] == 8
+    rs = _named(events, "checkpoint_restore")
+    assert len(rs) == 1 and rs[0]["to_step"] == 4
+    assert os.path.isdir(os.path.join(d, "step_0000000008.quarantined"))
+
+
+@pytest.mark.slow
+def test_matrix_slow_step_watchdog_escalates(tmp_path):
+    final, events, _ = _launch(tmp_path, "slow", [
+        "--steps", "13", "--chaos", "slow_step@10:2.0",
+        "--stats-refresh-every", "4", "--snapshot-every", "4",
+        "--watchdog-escalate-after", "1"])
+    assert np.isfinite(final)
+    wd = _named(events, "watchdog")
+    assert any(e["step"] == 10 for e in wd), events
+    esc = _named(events, "watchdog_escalated")
+    assert esc and esc[0]["snapshot"] is True
+
+
+def _manifest_files(ckpt_dir, step):
+    with open(os.path.join(ckpt_dir, f"step_{step:010d}",
+                           "MANIFEST.json")) as f:
+        return json.load(f)["files"]
+
+
+@pytest.mark.slow
+def test_matrix_bitwise_acceptance_at_model_scale(tmp_path):
+    """nan_grad@t and reject@t runs share one executable and one rejected-
+    step schedule -> their final checkpoints' per-leaf CRC32 manifests
+    must be identical (bitwise-equal params/opt/bank/guard)."""
+    manifests = {}
+    for spec in ("nan_grad@5x3", "reject@5x3"):
+        d = str(tmp_path / spec.split("@")[0])
+        _launch(tmp_path, spec.split("@")[0], [
+            "--steps", "16", "--chaos", spec,
+            "--snapshot-every", "4", "--stats-refresh-every", "4",
+            "--ckpt-dir", d, "--ckpt-every", "16"])
+        manifests[spec] = _manifest_files(d, 16)
+    assert manifests["nan_grad@5x3"] == manifests["reject@5x3"]
+
+
+@pytest.mark.slow
+def test_matrix_resume_auto_skips_corrupt_newest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    _launch(tmp_path, "seed", [
+        "--steps", "8", "--ckpt-dir", d, "--ckpt-every", "4",
+        "--stats-refresh-every", "4"])
+    # truncate the newest committed step's first leaf
+    step8 = os.path.join(d, "step_0000000008")
+    leaf = os.path.join(step8, sorted(
+        n for n in os.listdir(step8) if n.endswith(".npy"))[0])
+    with open(leaf, "r+b") as f:
+        f.truncate(os.path.getsize(leaf) // 2)
+    final, events, stdout = _launch(tmp_path, "resume", [
+        "--steps", "12", "--resume", "auto", "--ckpt-dir", d,
+        "--ckpt-every", "4", "--stats-refresh-every", "4"])
+    assert np.isfinite(final)
+    assert "resumed from step 4" in stdout
+    q = _named(events, "checkpoint_quarantined")
+    assert len(q) == 1 and q[0]["step"] == 8

@@ -1,0 +1,686 @@
+"""Resilience layer suite: StepGuard, snapshot ring, escalation ladder,
+hardened checkpoint I/O, and the watchdog fixes.
+
+Covers the ISSUE 8 acceptance criteria that live below the chaos matrix
+(tests/test_chaos.py runs the matrix itself):
+
+  * Watchdog: bounded deque (no unbounded ``times`` growth), true
+    even-window median, min_history clamp;
+  * StepGuard verdict units (nonfinite / spike / sat / forced; EMA only
+    integrates accepted steps; warmup arming) and the fused [2, N] bank
+    probe (ONE reduce);
+  * a rejected step leaves params/opt_state/StatsBank/guard carry
+    bit-identical to pre-step, under jit (fast) and under an 8-device
+    mesh (slow subprocess, order-exact tests/mesh_toy.py setup);
+  * jaxpr budget: the guarded banked steady-state step runs exactly the
+    fp32 baseline's reductions + 1 bookkeeping min outside lax.cond —
+    with and without telemetry + the saturation sentinel, meshless and
+    sharded (the PR 5/7 invariant, unchanged by the guard);
+  * CheckpointManager hardening: manifest validation (truncate / bitflip
+    / missing manifest all fail closed), quarantine + fallback to the
+    newest VALID step with a ``checkpoint_quarantined`` event, explicit
+    steps raise, transient-I/O retry with backoff;
+  * TrainLoop ``maybe_resume`` (the ``--resume auto`` path) with the
+    newest checkpoint deliberately corrupted resumes from the previous
+    valid step;
+  * watchdog escalation: N consecutive trips push a proactive snapshot
+    and emit ``watchdog_escalated``.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mesh_toy
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import statsbank
+from repro.core.policy import make_policy
+from repro.obs import sinks as obs_sinks
+from repro.optim import optimizers, schedules
+from repro.training import chaos as chaos_mod
+from repro.training import fault
+from repro.training import guard as guard_mod
+from repro.training.trainer import TrainLoop, make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+_TESTS = os.path.dirname(__file__)
+
+
+def _subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([_SRC, _TESTS])
+    return env
+
+
+def _assert_trees_bitwise(a, b, msg=""):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (pa, xa), (_, xb) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(xa), np.asarray(xb),
+            err_msg=f"{msg} leaf {jax.tree_util.keystr(pa)}")
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: bounded deque + even-window median (the satellite fixes)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_times_bounded_at_window():
+    wd = fault.Watchdog(factor=3.0, window=8, min_history=4)
+    for s in range(100):
+        wd.observe(s, 0.1)
+    assert len(wd.times) == 8        # a million-step run must not grow this
+
+
+def test_watchdog_even_window_median_averages_middle_pair():
+    # trailing times {0.1, 0.1, 0.3, 0.3}: true median 0.2; the old
+    # upper-middle bug would read 0.3.  dt=0.5 discriminates: it exceeds
+    # 2 x 0.2 but NOT 2 x 0.3.
+    wd = fault.Watchdog(factor=2.0, window=4, min_history=4)
+    for s, dt in enumerate([0.1, 0.1, 0.3, 0.3]):
+        assert wd.observe(s, dt) is None
+    ev = wd.observe(4, 0.5)
+    assert ev is not None, "even-window median must average the middle pair"
+    assert ev["median_s"] == pytest.approx(0.2)
+
+
+def test_watchdog_min_history_clamped_to_window():
+    # min_history > window could never accumulate in the bounded deque —
+    # the detector would be permanently disarmed
+    wd = fault.Watchdog(factor=2.0, window=4, min_history=100)
+    assert wd.min_history == 4
+    for s in range(4):
+        wd.observe(s, 0.1)
+    assert wd.observe(4, 10.0) is not None
+
+
+def test_watchdog_validation():
+    with pytest.raises(ValueError):
+        fault.Watchdog(factor=0.0)
+    with pytest.raises(ValueError):
+        fault.Watchdog(window=0)
+
+
+# ---------------------------------------------------------------------------
+# StepGuard verdict units
+# ---------------------------------------------------------------------------
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError, match="spike_factor"):
+        guard_mod.GuardConfig(spike_factor=1.0)
+    with pytest.raises(ValueError, match="ema_decay"):
+        guard_mod.GuardConfig(ema_decay=1.0)
+
+
+def test_guard_accepts_healthy_step_and_seeds_ema():
+    cfg = guard_mod.GuardConfig()
+    st = guard_mod.init_state()
+    flags, st1 = guard_mod.evaluate(cfg, st, jnp.float32(1.0),
+                                    jnp.float32(2.0))
+    assert bool(flags["ok"]) and bool(flags["ok_bank"])
+    assert not any(bool(flags[c]) for c in ("nonfinite", "spike", "forced"))
+    assert float(st1["steps"]) == 1.0
+    assert float(st1["gnorm_ema"]) == 2.0      # first accepted step seeds
+
+
+def test_guard_trips_on_nonfinite_and_freezes_carry():
+    cfg = guard_mod.GuardConfig()
+    st = {"gnorm_ema": jnp.float32(3.0), "steps": jnp.float32(5.0)}
+    for loss, gn in ((jnp.float32(np.nan), jnp.float32(1.0)),
+                     (jnp.float32(np.inf), jnp.float32(1.0)),
+                     (jnp.float32(1.0), jnp.float32(np.nan)),
+                     (jnp.float32(1.0), jnp.float32(np.inf))):
+        flags, st1 = guard_mod.evaluate(cfg, st, loss, gn)
+        assert not bool(flags["ok"]) and not bool(flags["ok_bank"])
+        assert bool(flags["nonfinite"])
+        # the rejected step "didn't happen": EMA and counter untouched
+        assert float(st1["gnorm_ema"]) == 3.0
+        assert float(st1["steps"]) == 5.0
+
+
+def test_guard_spike_requires_warmup():
+    cfg = guard_mod.GuardConfig(spike_factor=10.0, warmup=8)
+    hot = jnp.float32(50.0)
+    cold = {"gnorm_ema": jnp.float32(1.0), "steps": jnp.float32(3.0)}
+    flags, st1 = guard_mod.evaluate(cfg, cold, jnp.float32(1.0), hot)
+    assert bool(flags["ok"]), "spike sentinel must stay disarmed in warmup"
+    armed = {"gnorm_ema": jnp.float32(1.0), "steps": jnp.float32(8.0)}
+    flags, st1 = guard_mod.evaluate(cfg, armed, jnp.float32(1.0), hot)
+    assert not bool(flags["ok"]) and bool(flags["spike"])
+    assert float(st1["gnorm_ema"]) == 1.0      # rejected: EMA frozen
+
+
+def test_guard_ema_integrates_accepted_steps():
+    cfg = guard_mod.GuardConfig(ema_decay=0.5)
+    st = {"gnorm_ema": jnp.float32(2.0), "steps": jnp.float32(1.0)}
+    flags, st1 = guard_mod.evaluate(cfg, st, jnp.float32(1.0),
+                                    jnp.float32(4.0))
+    assert bool(flags["ok"])
+    assert float(st1["gnorm_ema"]) == pytest.approx(3.0)   # 0.5*2 + 0.5*4
+    assert float(st1["steps"]) == 2.0
+
+
+def test_guard_saturation_rejects_update_but_accepts_bank():
+    cfg = guard_mod.GuardConfig(sat_threshold=0.5)
+    st = guard_mod.init_state()
+    flags, _ = guard_mod.evaluate(cfg, st, jnp.float32(1.0),
+                                  jnp.float32(1.0),
+                                  sat_margin=jnp.float32(-0.1))
+    assert not bool(flags["ok"]) and bool(flags["sat"])
+    # the refresh that measured the saturation is the remedy — keep it
+    assert bool(flags["ok_bank"])
+
+
+def test_guard_forced_reject():
+    cfg = guard_mod.GuardConfig()
+    st = guard_mod.init_state()
+    flags, _ = guard_mod.evaluate(cfg, st, jnp.float32(1.0),
+                                  jnp.float32(1.0),
+                                  force_reject=jnp.bool_(True))
+    assert not bool(flags["ok"]) and not bool(flags["ok_bank"])
+    assert bool(flags["forced"])
+
+
+def test_flag_metrics_excludes_ok_bank():
+    flags = {"ok": jnp.bool_(True), "ok_bank": jnp.bool_(True),
+             "nonfinite": jnp.bool_(False), "spike": jnp.bool_(False),
+             "sat": jnp.bool_(False), "forced": jnp.bool_(False)}
+    m = guard_mod.flag_metrics(flags)
+    assert "guard_ok" in m and "guard_ok_bank" not in m
+    assert all(v.dtype == jnp.float32 for v in m.values())
+
+
+# ---------------------------------------------------------------------------
+# the fused [2, N] bank probe
+# ---------------------------------------------------------------------------
+
+def _probe_banks():
+    input_bank = {
+        "a": {"fwd": {"last": jnp.float32(5.0), "sat_frac": jnp.float32(0.0)},
+              "bwd": {"last": jnp.float32(-1.0),
+                      "sat_frac": jnp.float32(0.0)}}}
+    new_bank = {
+        "a": {"fwd": {"last": jnp.float32(5.0), "sat_frac": jnp.float32(0.1)},
+              "bwd": {"last": jnp.float32(6.0),
+                      "sat_frac": jnp.float32(0.6)}}}
+    return input_bank, new_bank
+
+
+def test_bank_probe_values():
+    input_bank, new_bank = _probe_banks()
+    cold, margin = guard_mod.bank_probe(input_bank, new_bank, 0.5)
+    assert float(cold) == -1.0               # cold row reads the INPUT bank
+    assert float(margin) == pytest.approx(-0.1)   # 0.5 - max(sat_frac)
+    # sentinel off: margin None, cold probe degrades to the plain min
+    cold, margin = guard_mod.bank_probe(input_bank, new_bank, 0.0)
+    assert float(cold) == -1.0 and margin is None
+
+
+def test_bank_probe_pads_ragged_rows():
+    # sat leaves on only ONE direction: the rows have different lengths
+    # and must pad with +inf (which can never win a min)
+    input_bank = {"a": {"fwd": {"last": jnp.float32(2.0)},
+                        "bwd": {"last": jnp.float32(3.0)}}}
+    new_bank = {"a": {"fwd": {"last": jnp.float32(2.0),
+                              "sat_frac": jnp.float32(0.9)},
+                      "bwd": {"last": jnp.float32(3.0)}}}
+    cold, margin = guard_mod.bank_probe(input_bank, new_bank, 0.5)
+    assert float(cold) == 2.0
+    assert float(margin) == pytest.approx(-0.4)
+
+
+def test_bank_probe_is_one_reduction():
+    input_bank, new_bank = _probe_banks()
+    jx = jax.make_jaxpr(
+        lambda a, b: guard_mod.bank_probe(a, b, 0.5))(input_bank, new_bank)
+    assert statsbank.count_reductions(jx) == 1
+
+
+def test_saturation_leaves_none_without_telemetry():
+    bank = {"a": {"fwd": {"last": jnp.float32(1.0)}}}
+    assert guard_mod.saturation_leaves(bank) is None
+
+
+def test_force_refresh_only_touches_bwd_carrying_sites():
+    bank = {"gemm": {"x_fwd": {"last": jnp.float32(5.0)},
+                     "dy_bwd": {"last": jnp.float32(5.0)}},
+            "readonly": {"x_fwd": {"last": jnp.float32(7.0)}}}
+    out = statsbank.force_refresh(bank)
+    assert float(out["gemm"]["x_fwd"]["last"]) == -1.0
+    assert float(out["gemm"]["dy_bwd"]["last"]) == -1.0
+    # merge_updates carries read-only sites' INPUT forward: a -1 there
+    # would never clear
+    assert float(out["readonly"]["x_fwd"]["last"]) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# SnapshotRing
+# ---------------------------------------------------------------------------
+
+def _snap_tree():
+    rng = np.random.RandomState(0)
+    return {"w": jnp.asarray(rng.randn(128, 64).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(16).astype(np.float32)),
+            "count": jnp.int32(7)}
+
+
+def test_snapshot_ring_validation():
+    with pytest.raises(ValueError):
+        guard_mod.SnapshotRing(size=0)
+
+
+def test_snapshot_ring_bounded_depth_and_latest():
+    ring = guard_mod.SnapshotRing(size=3)
+    tree = _snap_tree()
+    for s in range(6):
+        ring.push(s, tree)
+    assert len(ring) == 3
+    step, _ = ring.latest()
+    assert step == 5
+    assert guard_mod.SnapshotRing(size=2).latest() is None
+
+
+def test_snapshot_ring_uncompressed_roundtrip_bitwise():
+    ring = guard_mod.SnapshotRing(size=2)
+    tree = _snap_tree()
+    ring.push(4, tree)
+    _, back = ring.latest()
+    _assert_trees_bitwise(back, tree, "ring")
+
+
+def test_snapshot_ring_compressed_lossy_but_close():
+    ring = guard_mod.SnapshotRing(size=2, compress=True)
+    tree = _snap_tree()
+    ring.push(4, tree)
+    _, back = ring.latest()
+    # the big 2-D f32 leaf took the S2FP8 codec: lossy but tight
+    assert not np.array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
+    err = np.abs(np.asarray(back["w"]) - np.asarray(tree["w"]))
+    assert np.median(err / (np.abs(np.asarray(tree["w"])) + 1e-6)) < 0.1
+    # small / integer leaves stay raw -> bit-exact
+    np.testing.assert_array_equal(np.asarray(back["b"]),
+                                  np.asarray(tree["b"]))
+    assert int(back["count"]) == 7
+
+
+# ---------------------------------------------------------------------------
+# rejected step is bitwise-invisible (jit, fast lane)
+# ---------------------------------------------------------------------------
+
+def _chaos_batch(s, reject_at=-1, nan_at=-1, inf_at=-1):
+    b = dict(mesh_toy.make_batch(s))
+    b["_chaos"] = {"nan_grad": jnp.int32(nan_at),
+                   "inf_loss": jnp.int32(inf_at),
+                   "reject": jnp.int32(reject_at)}
+    return b
+
+
+@pytest.mark.parametrize("injector", ["reject", "nan_grad", "inf_loss"])
+def test_rejected_step_bitwise_under_jit(injector):
+    step, params, opt_state, bank, _ = mesh_toy.setup(
+        guard=guard_mod.GuardConfig())
+    gs = guard_mod.init_state()
+    for s in range(3):
+        params, opt_state, bank, gs, m = step(
+            params, opt_state, bank, gs, _chaos_batch(s), jnp.int32(s))
+        assert float(m["guard_ok"]) == 1.0
+    pre = jax.device_get((params, opt_state, bank, gs))
+    kw = {{"reject": "reject_at", "nan_grad": "nan_at",
+           "inf_loss": "inf_at"}[injector]: 3}
+    p2, o2, b2, g2, m = step(params, opt_state, bank, gs,
+                             _chaos_batch(3, **kw), jnp.int32(3))
+    assert float(m["guard_ok"]) == 0.0
+    cause = "forced" if injector == "reject" else "nonfinite"
+    assert float(m[f"guard_{cause}"]) == 1.0
+    _assert_trees_bitwise(jax.device_get((p2, o2, b2, g2)), pre,
+                          f"rejected-{injector}")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr budget: guard adds ZERO reductions outside lax.cond
+# ---------------------------------------------------------------------------
+
+def _toy_jaxpr(mesh, policy, stats_cfg, guard=None, with_chaos=False):
+    opt = optimizers.adamw()
+    params = mesh_toy.make_params()
+    args = [params, opt.init(params)]
+    if stats_cfg is not None:
+        args.append(statsbank.init_bank(mesh_toy.loss_fn, params,
+                                        mesh_toy.make_batch(0), policy,
+                                        stats_cfg))
+    if guard is not None:
+        args.append(guard_mod.init_state())
+    batch = mesh_toy.make_batch(0)
+    if with_chaos:
+        batch = dict(batch)
+        batch["_chaos"] = {n: jnp.int32(-1) for n in chaos_mod.IN_TRACE}
+    args += [batch, jnp.int32(1)]
+    step = make_train_step(mesh_toy.loss_fn, opt, schedules.constant(1e-3),
+                           policy, stats=stats_cfg, mesh=mesh, guard=guard)
+    return jax.make_jaxpr(step)(*args)
+
+
+@pytest.mark.parametrize("sharded", [False, True],
+                         ids=["meshless", "mesh1"])
+def test_guarded_steady_state_reduction_budget(sharded):
+    """The PR 5/7 invariant with the guard armed: banked + guarded (+
+    chaos operands) steady state == fp32 baseline + 1 bookkeeping min
+    outside lax.cond.  The guard evaluates on scalars the step already
+    reduces, and the chaos injectors are elementwise `where`s."""
+    mesh = jax.make_mesh((1, 1), ("data", "model")) if sharded else None
+    pol = make_policy("s2fp8_e4m3", gemm_mode="payload")
+    scfg = statsbank.StatsConfig(refresh_every=64)
+    n_fp32 = statsbank.count_reductions(
+        _toy_jaxpr(mesh, make_policy("fp32"), None), include_cond=False)
+    n_guarded = statsbank.count_reductions(
+        _toy_jaxpr(mesh, pol, scfg, guard=guard_mod.GuardConfig(),
+                   with_chaos=True), include_cond=False)
+    assert n_guarded == n_fp32 + 1, (n_guarded, n_fp32)
+
+
+def test_guarded_saturation_sentinel_keeps_budget():
+    """With telemetry + the saturation sentinel the probe widens to the
+    fused [2, N] stack — still exactly ONE non-cond reduction on top of
+    the fp32 baseline."""
+    pol = make_policy("s2fp8_e4m3", gemm_mode="payload")
+    scfg = statsbank.StatsConfig(refresh_every=64, telemetry=True)
+    n_fp32 = statsbank.count_reductions(
+        _toy_jaxpr(None, make_policy("fp32"), None), include_cond=False)
+    n_sat = statsbank.count_reductions(
+        _toy_jaxpr(None, pol, scfg,
+                   guard=guard_mod.GuardConfig(sat_threshold=0.5),
+                   with_chaos=True), include_cond=False)
+    assert n_sat == n_fp32 + 1, (n_sat, n_fp32)
+
+
+def test_guard_without_bank_adds_no_reductions():
+    """A bankless guarded fp32 step reuses the baseline's loss/grad_norm
+    scalars outright — not even the bookkeeping min exists."""
+    n_fp32 = statsbank.count_reductions(
+        _toy_jaxpr(None, make_policy("fp32"), None), include_cond=False)
+    n_guarded = statsbank.count_reductions(
+        _toy_jaxpr(None, make_policy("fp32"), None,
+                   guard=guard_mod.GuardConfig(), with_chaos=True),
+        include_cond=False)
+    assert n_guarded == n_fp32, (n_guarded, n_fp32)
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh: rejected step bitwise (slow subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH8_REJECT_SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+import mesh_toy
+from repro.training import guard as guard_mod
+
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+step, params, opt_state, bank, _ = mesh_toy.setup(
+    mesh=mesh, guard=guard_mod.GuardConfig())
+gs = guard_mod.init_state()
+
+def chaos_batch(s, reject_at=-1, nan_at=-1):
+    b = dict(mesh_toy.make_batch(s))
+    b["_chaos"] = {"nan_grad": jnp.int32(nan_at),
+                   "inf_loss": jnp.int32(-1),
+                   "reject": jnp.int32(reject_at)}
+    return b
+
+for s in range(3):
+    params, opt_state, bank, gs, m = step(
+        params, opt_state, bank, gs, chaos_batch(s), jnp.int32(s))
+
+pre = jax.device_get((params, opt_state, bank, gs))
+
+def bitwise(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+out = {}
+p2, o2, b2, g2, m = step(params, opt_state, bank, gs,
+                         chaos_batch(3, reject_at=3), jnp.int32(3))
+out["reject_bitwise"] = bitwise(jax.device_get((p2, o2, b2, g2)), pre)
+out["reject_ok"] = float(m["guard_ok"])
+
+p3, o3, b3, g3, m = step(params, opt_state, bank, gs,
+                         chaos_batch(3, nan_at=3), jnp.int32(3))
+out["nan_bitwise"] = bitwise(jax.device_get((p3, o3, b3, g3)), pre)
+out["nan_ok"] = float(m["guard_ok"])
+out["nan_cause"] = float(m["guard_nonfinite"])
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_mesh8_rejected_step_bitwise():
+    proc = subprocess.run([sys.executable, "-c", _MESH8_REJECT_SCRIPT],
+                          env=_subprocess_env(), capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert out["reject_bitwise"] is True, out
+    assert out["nan_bitwise"] is True, out
+    assert out["reject_ok"] == 0.0 and out["nan_ok"] == 0.0, out
+    assert out["nan_cause"] == 1.0, out
+
+
+# ---------------------------------------------------------------------------
+# hardened checkpoint I/O
+# ---------------------------------------------------------------------------
+
+def _tree(seed):
+    rng = np.random.RandomState(seed)
+    return {"w": jnp.asarray(rng.randn(8, 4).astype(np.float32)),
+            "step": jnp.int32(seed)}
+
+
+def _damage(step_dir, flavor):
+    if flavor == "manifest":
+        os.remove(os.path.join(step_dir, "MANIFEST.json"))
+        return
+    leaf = os.path.join(step_dir, sorted(
+        n for n in os.listdir(step_dir) if n.endswith(".npy"))[0])
+    if flavor == "bitflip":
+        with open(leaf, "r+b") as f:
+            f.seek(-1, 2)
+            byte = f.read(1)
+            f.seek(-1, 2)
+            f.write(bytes([byte[0] ^ 0xFF]))
+    else:                                   # truncate
+        with open(leaf, "r+b") as f:
+            f.truncate(os.path.getsize(leaf) // 2)
+
+
+@pytest.mark.parametrize("flavor,reason", [
+    ("truncate", "size mismatch"),
+    ("bitflip", "checksum mismatch"),
+    ("manifest", "missing manifest"),
+])
+def test_restore_quarantines_corrupt_and_falls_back(tmp_path, flavor,
+                                                    reason):
+    events = []
+    ck = CheckpointManager(str(tmp_path), event_fn=events.append)
+    ck.save(1, _tree(1))
+    ck.save(2, _tree(2))
+    assert ck.validate(2) == (True, "ok")
+    _damage(ck._step_dir(2), flavor)
+    ok, why = ck.validate(2)
+    assert not ok and reason in why, (ok, why)
+    restored, step = ck.restore(_tree(0))
+    assert step == 1
+    _assert_trees_bitwise(restored, _tree(1), "fallback")
+    q = [e for e in events if e.get("event") == "checkpoint_quarantined"]
+    assert len(q) == 1 and q[0]["step"] == 2 and reason in q[0]["reason"]
+    assert os.path.isdir(str(tmp_path / "step_0000000002.quarantined"))
+    # the quarantined dir is invisible to every scan
+    assert ck.latest_step() == 1
+
+
+def test_restore_explicit_corrupt_step_raises(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(3, _tree(3))
+    _damage(ck._step_dir(3), "truncate")
+    with pytest.raises(ValueError, match="failed validation"):
+        ck.restore(_tree(0), step=3)
+
+
+def test_restore_all_corrupt_raises_filenotfound(tmp_path):
+    events = []
+    ck = CheckpointManager(str(tmp_path), event_fn=events.append)
+    ck.save(1, _tree(1))
+    ck.save(2, _tree(2))
+    _damage(ck._step_dir(1), "truncate")
+    _damage(ck._step_dir(2), "manifest")
+    with pytest.raises(FileNotFoundError, match="no valid checkpoint"):
+        ck.restore(_tree(0))
+    assert len([e for e in events
+                if e.get("event") == "checkpoint_quarantined"]) == 2
+
+
+def test_step_of_parser_ignores_strays(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(5, _tree(5))
+    # strays that used to crash int() parses in latest_step/_gc
+    os.makedirs(str(tmp_path / "step_0000000001.quarantined"))
+    os.makedirs(str(tmp_path / "step_abc"))
+    (tmp_path / "notes.txt").write_text("x")
+    assert ck.latest_step() == 5
+    ck._gc()
+    restored, step = ck.restore(_tree(0))
+    assert step == 5
+
+
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    ck = CheckpointManager(str(tmp_path), retries=3, backoff_s=0.0)
+    calls = {"n": 0}
+    real_save = np.save
+
+    def flaky_save(path, arr, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("transient")
+        return real_save(path, arr, *a, **kw)
+
+    monkeypatch.setattr(np, "save", flaky_save)
+    ck.save(1, _tree(1))
+    assert calls["n"] >= 3
+    assert ck.validate(1) == (True, "ok")
+    restored, step = ck.restore(_tree(0))
+    assert step == 1
+
+
+def test_save_retry_exhaustion_reraises(tmp_path, monkeypatch):
+    ck = CheckpointManager(str(tmp_path), retries=2, backoff_s=0.0)
+
+    def always_fail(*a, **kw):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(np, "save", always_fail)
+    with pytest.raises(OSError, match="disk on fire"):
+        ck.save(1, _tree(1))
+
+
+def test_read_retries_transient_oserror(tmp_path, monkeypatch):
+    ck = CheckpointManager(str(tmp_path), retries=3, backoff_s=0.0)
+    ck.save(1, _tree(1))
+    calls = {"n": 0}
+    real_load = np.load
+
+    def flaky_load(path, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("transient")
+        return real_load(path, *a, **kw)
+
+    monkeypatch.setattr(np, "load", flaky_load)
+    restored, step = ck.restore(_tree(0))
+    assert step == 1
+    _assert_trees_bitwise(restored, _tree(1), "retry-read")
+
+
+# ---------------------------------------------------------------------------
+# TrainLoop: --resume auto with a corrupted newest checkpoint (satellite)
+# ---------------------------------------------------------------------------
+
+def _toy_loop(ckpt_dir, sink, **kw):
+    step, params, opt_state, bank, _ = mesh_toy.setup()
+    ck = CheckpointManager(ckpt_dir, event_fn=sink.emit)
+    loop = TrainLoop(step, params, opt_state,
+                     lambda s: mesh_toy.make_batch(s),
+                     ckpt_manager=ck, stats_bank=bank, sink=sink,
+                     log_every=0, **kw)
+    return loop, ck
+
+
+def test_resume_auto_skips_corrupt_newest(tmp_path):
+    d = str(tmp_path)
+    sink = obs_sinks.MemorySink()
+    loop, ck = _toy_loop(d, sink, ckpt_every=2)
+    loop.run(6)                              # saves at steps 2, 4, 6
+    assert ck.latest_step() == 6
+    _damage(ck._step_dir(6), "truncate")
+
+    sink2 = obs_sinks.MemorySink()
+    loop2, _ = _toy_loop(d, sink2)
+    loop2.maybe_resume()
+    assert loop2.start_step == 4
+    q = [r for r in sink2.by_kind("event")
+         if r["event"] == "checkpoint_quarantined"]
+    assert len(q) == 1 and q[0]["step"] == 6
+
+    # the resumed state is exactly the clean run's state entering step 4
+    step, params, opt_state, bank, _ = mesh_toy.setup()
+    ref = mesh_toy.run(step, params, opt_state, bank, 4)
+    _assert_trees_bitwise(
+        (loop2.params, loop2.opt_state, loop2.stats_bank), ref[:3],
+        "resume-after-quarantine")
+
+
+# ---------------------------------------------------------------------------
+# watchdog escalation into the ladder (satellite)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_escalation_snapshots_and_emits():
+    from jax.experimental import io_callback
+    SLOW = (10, 11)                          # two consecutive stragglers
+
+    def host_pause(step):
+        if int(step) in SLOW:
+            time.sleep(0.25)
+        return np.float32(0.0)
+
+    def train_step(params, opt_state, batch, step):
+        z = io_callback(host_pause, jax.ShapeDtypeStruct((), jnp.float32),
+                        step, ordered=True)
+        return params, opt_state, {"loss": jnp.float32(1.0) + z,
+                                   "lr": jnp.float32(1e-3)}
+
+    sink = obs_sinks.MemorySink()
+    loop = TrainLoop(train_step, {"w": jnp.zeros((4,))},
+                     {"m": jnp.zeros((4,))},
+                     lambda s: {"x": jnp.zeros((2,))},
+                     log_every=0, watchdog_factor=3.0, sink=sink,
+                     snapshot_every=1000, watchdog_escalate_after=2)
+    loop.run(13)
+    trips = [r for r in sink.by_kind("event") if r["event"] == "watchdog"]
+    assert {10, 11} <= {r["step"] for r in trips}, sink.records
+    esc = [r for r in sink.by_kind("event")
+           if r["event"] == "watchdog_escalated"]
+    assert len(esc) == 1, sink.records
+    assert esc[0]["trips"] == 2 and esc[0]["snapshot"] is True
+    assert len(loop.ring) == 1               # the proactive snapshot
+    assert loop.ring.latest()[0] == esc[0]["step"] + 1
