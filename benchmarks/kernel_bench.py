@@ -305,6 +305,110 @@ def bench_dp(results, smoke=False):
     results["dp"].append(lane)
 
 
+def modeled_fsdp_ici_bytes(mode: str, n_elements: int,
+                           axis_size: int) -> dict:
+    """Modeled per-step interconnect traffic of ONE payload-eligible
+    param leaf under the param-sharding modes (bytes leaving each device;
+    ring schedule, ``(n-1)/n`` per hop-leg):
+
+      * ``replicated`` — no param movement; the grad all-reduces
+        (reduce-scatter + all-gather, both f32): ``2 * frac * 4``/elt.
+      * ``fsdp``       — just-in-time f32 all-gather (4 B/elt) + grad
+        reduce-scatter only (FSDP grads need to exist at the owner shard,
+        so the all-gather half of the all-reduce is dropped).
+      * ``fsdp_q``     — the gather leg moves 1-byte S2FP8 payloads (plus
+        one 8-byte (alpha, beta) pair per device); same f32 grad
+        reduce-scatter.  Gather leg = 4x below fsdp — the wire cut the
+        ISSUE 9 acceptance pins.
+    """
+    n = axis_size
+    frac = (n - 1) / n
+    if mode == "replicated":
+        gather = 0.0
+        grad = 2 * frac * 4 * n_elements
+    elif mode == "fsdp":
+        gather = frac * 4 * n_elements
+        grad = frac * 4 * n_elements
+    elif mode == "fsdp_q":
+        gather = frac * 1 * n_elements + 8 * (n - 1)
+        grad = frac * 4 * n_elements
+    else:
+        raise ValueError(mode)
+    total = gather + grad
+    return {"gather_bytes": gather, "grad_bytes": grad,
+            "total_bytes": total,
+            "bytes_per_element": total / n_elements}
+
+
+def bench_fsdp(results, smoke=False):
+    """Quantized-FSDP lane (ISSUE 9): the mesh-native train step with
+    params/optimizer replicated vs sharded (f32 gather) vs sharded with
+    S2FP8 payload streaming, on whatever devices exist.  Next to the
+    measured step times it records the modeled n=8 interconnect bytes
+    (``modeled_fsdp_ici_bytes``) and the modeled per-device resident
+    param+opt HBM bytes (launch/memplan.py — the same per-leaf rules the
+    trainer shards by), which carry the TPU-pod story off-device:
+    gather-leg wire ~4x down and resident store ~n_shards x down vs
+    replicated."""
+    from repro.core import statsbank
+    from repro.core.policy import make_policy
+    from repro.launch import memplan
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import optimizers, schedules
+    from repro.training.trainer import make_train_step
+
+    key = jax.random.PRNGKey(7)
+    n_tensors, dim, batch = (2, 256, 8) if smoke else (4, 1024, 16)
+    ndev = len(jax.devices())
+    mesh = make_host_mesh()
+    params = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                         (dim, dim)) * 1e-4
+              for i in range(n_tensors)}
+    x = jax.random.normal(jax.random.fold_in(key, 99),
+                          (batch, dim)) * 1e-4
+
+    def loss_fn(p, batch_, pol_):
+        h = batch_
+        for i in range(n_tensors):
+            h = pol_.dot(h, p[f"w{i}"])
+        return jnp.mean(h * h), {}
+
+    # fsdp_q hands FSDPPayloadParam wrappers to Policy.dot, so the GEMMs
+    # must take the payload route even on the ref engine
+    pol = make_policy("s2fp8", gemm_mode="payload")
+    opt = optimizers.adamw()
+    sched = schedules.constant(1e-3)
+    scfg = statsbank.StatsConfig(refresh_every=16)
+    bank = statsbank.init_bank(loss_fn, params, x, pol, scfg)
+    ost = opt.init(params)
+
+    lane = {"n_devices": ndev, "n_tensors": n_tensors, "dim": dim,
+            "batch": batch, "param_elements": n_tensors * dim * dim}
+    for mode in ("replicated", "fsdp", "fsdp_q"):
+        step = jax.jit(make_train_step(loss_fn, opt, sched, pol, stats=scfg,
+                                       mesh=mesh, param_sharding=mode))
+        p1, o1, bank_w, _ = jax.block_until_ready(
+            step(params, ost, bank, x, jnp.int32(0)))   # bootstrap refresh
+        us = time_jitted(
+            lambda b_: step(p1, o1, bank_w, b_, jnp.int32(1))[3]["loss"],
+            x, iters=2 if smoke else 5)
+        lane[f"{mode}_step_us"] = us
+        emit(f"fsdp_train_{mode}_d{ndev}", us,
+             f"{n_tensors}x[{dim}x{dim}] params, {ndev}-way mesh")
+    n_elt = n_tensors * dim * dim
+    ici = {m: modeled_fsdp_ici_bytes(m, n_elt, 8)
+           for m in ("replicated", "fsdp", "fsdp_q")}
+    lane["modeled_ici_bytes_per_elt_n8"] = {
+        m: v["bytes_per_element"] for m, v in ici.items()}
+    lane["modeled_gather_bytes_per_elt_n8"] = {
+        m: v["gather_bytes"] / n_elt for m, v in ici.items()}
+    ostruct = jax.eval_shape(opt.init, params)
+    lane["modeled_hbm_resident_bytes_n8"] = {
+        m: memplan.plan_state(params, ostruct, 8, m)["steady_bytes"]
+        for m in ("replicated", "fsdp", "fsdp_q")}
+    results["fsdp"].append(lane)
+
+
 def bench_gemm(results, sizes=(512, 1024, 2048), smoke=False):
     """The payload-domain training GEMM lane: full fwd+bwd step over one
     ``Policy.dot``, three ways —
@@ -639,7 +743,8 @@ def main(smoke: bool = False):
                "n_devices": prov["n_devices"],
                "provenance": prov,
                "truncate": [], "quantize": [], "matmul": [], "stats": [],
-               "gemm": [], "moe": [], "conv": [], "dp": [], "attn": []}
+               "gemm": [], "moe": [], "conv": [], "dp": [], "fsdp": [],
+               "attn": []}
     key = jax.random.PRNGKey(0)
 
     if smoke:
@@ -652,13 +757,15 @@ def main(smoke: bool = False):
         bench_conv(results, smoke=True)
         bench_statsbank(results, smoke=True)
         bench_dp(results, smoke=True)
+        bench_fsdp(results, smoke=True)
         bench_attn(results, sizes=(256,), smoke=True)
         _stamp_provenance(results, prov)
         # falsifiable structure checks: every expected lane must have been
         # emitted with finite timings (a lane that silently skipped its
         # work, or a refactor that dropped one, fails the build here)
         assert all(len(results[k]) == 1
-                   for k in ("gemm", "moe", "conv", "stats", "dp", "attn")), \
+                   for k in ("gemm", "moe", "conv", "stats", "dp", "fsdp",
+                             "attn")), \
             {k: len(v) for k, v in results.items() if isinstance(v, list)}
         assert all("provenance" in row for k, v in results.items()
                    if isinstance(v, list) for row in v), "unstamped lane row"
@@ -678,6 +785,21 @@ def main(smoke: bool = False):
         # sync moves strictly fewer bytes than f32 at any n > 1
         m = dp["modeled_ici_bytes_per_elt_n8"]
         assert m["s2fp8"] < m["f32"], m
+        # fsdp lane (ISSUE 9): all three modes timed; the modeled payload
+        # gather leg is ~4x below the f32 gather, and the modeled
+        # resident param+opt store drops ~n_shards x vs replicated
+        fl = results["fsdp"][0]
+        for want in ("replicated_step_us", "fsdp_step_us",
+                     "fsdp_q_step_us"):
+            assert _math.isfinite(fl[want]), (want, fl[want])
+        gb = fl["modeled_gather_bytes_per_elt_n8"]
+        assert gb["fsdp"] / gb["fsdp_q"] >= 3.5, gb
+        assert gb["replicated"] == 0.0, gb
+        rb = fl["modeled_hbm_resident_bytes_n8"]
+        assert rb["replicated"] / rb["fsdp_q"] >= 0.9 * 8, rb
+        assert rb["fsdp"] == rb["fsdp_q"], rb   # same sharded store
+        ib = fl["modeled_ici_bytes_per_elt_n8"]
+        assert ib["fsdp_q"] < ib["fsdp"] <= ib["replicated"], ib
         # attention lane structure: all three routings timed at smoke S,
         # the payload flash model has NO s^2 term (doubling S doubles its
         # bytes instead of quadrupling), and its saved residuals are the
@@ -701,6 +823,7 @@ def main(smoke: bool = False):
     bench_moe(results)
     bench_conv(results)
     bench_dp(results)
+    bench_fsdp(results)
     bench_attn(results)
 
     for n in [1 << 16, 1 << 20, 1 << 22]:

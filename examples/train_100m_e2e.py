@@ -18,6 +18,14 @@ checkpointed on 8 devices resumes on 1 (and vice versa):
     PYTHONPATH=src python examples/train_100m_e2e.py --steps 300 --batch 8 \
         --host-devices 1 --mesh none
 
+Quantized FSDP (ISSUE 9): ``--shard-params fsdp`` shards param/optimizer
+leaves over the data axis (ZeRO-3) with just-in-time f32 all-gathers;
+``--shard-params fsdp_q`` gathers the S2FP8 *payloads* (1 byte/element on
+the wire) straight into the banked GEMMs:
+
+    PYTHONPATH=src python examples/train_100m_e2e.py --steps 200 --batch 8 \
+        --host-devices 8 --mesh host --shard-params fsdp_q
+
 This is the deliverable-(b) driver: full stack (config -> model -> policy ->
 optimizer/schedule -> data pipeline -> TrainLoop with watchdog/checkpoints).
 """
@@ -40,6 +48,16 @@ def parse_args():
     ap.add_argument("--grad-sync", default="f32", choices=["f32", "s2fp8"],
                     help="cross-shard gradient sync: plain f32 psum or the "
                          "S2FP8-compressed reduce-scatter/all-gather")
+    ap.add_argument("--grad-sync-min-size", type=int, default=1 << 16,
+                    help="element floor below which leaves keep the exact "
+                         "f32 sync even under s2fp8 (and the floor for the "
+                         "FSDP compressed grad-scatter leg)")
+    ap.add_argument("--shard-params", default="replicated",
+                    choices=["replicated", "fsdp", "fsdp_q"],
+                    help="param/opt placement: replicated, ZeRO-3 fsdp "
+                         "(f32 just-in-time gather), or fsdp_q (S2FP8 "
+                         "payload gather straight into the banked GEMMs; "
+                         "needs an s2fp8 policy + --stats-refresh-every)")
     ap.add_argument("--stats-refresh-every", type=int, default=16,
                     help="StatsBank refresh cadence for s2fp8 policies "
                          "(0 = exact stats every truncation)")
@@ -112,7 +130,11 @@ def main():
           f"mesh={'none' if mesh is None else dict(zip(mesh.axis_names, mesh.devices.shape))}, "
           f"grad-sync={args.grad_sync}")
 
-    pol = make_policy(args.policy)
+    # fsdp_q hands gathered payloads straight to qdot_train, so the GEMMs
+    # must take the payload route even off the pallas engines
+    pol = make_policy(args.policy,
+                      gemm_mode=("payload" if args.shard_params == "fsdp_q"
+                                 else "auto"))
     params = tlm.init_lm(CFG, jax.random.PRNGKey(args.seed))
     opt = optimizers.adamw(weight_decay=0.01)
     sched = schedules.cosine(3e-4 * 8, warmup=20, total=args.steps)
@@ -154,9 +176,19 @@ def main():
               + (f", snapshot ring every {args.snapshot_every}"
                  if args.snapshot_every else ""))
 
+    if args.shard_params != "replicated":
+        if mesh is None:
+            raise SystemExit("--shard-params needs a mesh (--mesh != none)")
+        if args.shard_params == "fsdp_q" and stats_cfg is None:
+            raise SystemExit("--shard-params fsdp_q needs an s2fp8 policy "
+                             "with --stats-refresh-every > 0")
+        print(f"[e2e] params {args.shard_params}: opt/param leaves shard "
+              f"dim 0 over the data axis (ZeRO-3)")
     step_fn = make_train_step(loss_fn, opt, sched, pol, stats=stats_cfg,
                               mesh=mesh, grad_sync_mode=args.grad_sync,
-                              telemetry=telemetry, guard=guard_cfg)
+                              grad_sync_min_size=args.grad_sync_min_size,
+                              telemetry=telemetry, guard=guard_cfg,
+                              param_sharding=args.shard_params)
 
     # event_fn surfaces checkpoint_quarantined through the same sink the
     # ladder's intervention events use

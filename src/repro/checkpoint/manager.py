@@ -13,7 +13,13 @@ Design (scales to multi-host; exercised single-host here):
     path: a carry saved from an 8-device mesh-native train step restores
     bit-exact on a single device (and vice versa; tests/test_mesh_train.py
     round-trips exactly that).  Restored leaves are host numpy; the next
-    jitted step lays them out per its own sharding specs.
+    jitted step lays them out per its own sharding specs.  This contract
+    also covers FSDP (ISSUE 9): param/optimizer leaves sharded over the
+    fsdp axis arrive here as fully-addressable GSPMD arrays, so
+    ``device_get`` gathers the full leaf on save and nothing in the file
+    format records the topology — a ZeRO-3 run saved on 8 devices
+    restores bit-exact on 1 or 4 and resumes under the new mesh's specs
+    (tests/test_mesh_train.py::test_fsdp8_save_restores_on_other_topologies).
   * S2FP8 compression (beyond-paper, core/s2fp8.py): optional 1-byte payload
     + (alpha, beta) per tensor for non-master state, ~4x smaller checkpoints.
   * retention: keep the latest ``keep`` checkpoints; GC is also atomic.

@@ -37,7 +37,8 @@ benchmarks/kernel_bench.py).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple, \
+    Union
 
 import jax
 import jax.numpy as jnp
@@ -132,7 +133,7 @@ def compressed_allreduce_axis(flat: jnp.ndarray, axis_name: str,
 
 def grad_sync_axis(grads, axis_name: AxisName, axis_sizes: Dict[str, int],
                    *, mode: str = "s2fp8", min_size: int = 1 << 16,
-                   backend: Optional[str] = None):
+                   backend: Optional[str] = None, skip=None):
     """SUM-reduce a gradient pytree across mapped mesh axes, inside an
     existing ``shard_map`` body.
 
@@ -153,6 +154,11 @@ def grad_sync_axis(grads, axis_name: AxisName, axis_sizes: Dict[str, int],
     compressed legs run over the LAST axis (the largest, innermost data
     axis by the mesh conventions in launch/mesh.py) and a plain f32 psum
     folds the leading axes first.
+
+    ``skip``: optional bool pytree matching ``grads`` — True leaves are
+    returned untouched.  The FSDP train step uses this for param leaves
+    whose gradients exit ``jax.grad`` already reduce-scattered to the
+    owner shard by the gather custom_vjp's backward.
     """
     if mode not in ("f32", "s2fp8"):
         raise ValueError(f"grad_sync mode must be 'f32' or 's2fp8', "
@@ -176,7 +182,172 @@ def grad_sync_axis(grads, axis_name: AxisName, axis_sizes: Dict[str, int],
                                         backend)
         return out.reshape(g.shape).astype(g.dtype)
 
+    if skip is not None:
+        return jax.tree_util.tree_map(
+            lambda g, s: g if s else sync(g), grads, skip)
     return jax.tree_util.tree_map(sync, grads)
+
+
+# ---------------------------------------------------------------------------
+# FSDP param axis: gather-on-use / scatter-on-grad
+# ---------------------------------------------------------------------------
+#
+# The grad machinery above syncs REPLICATED leaves; this section is the
+# param-axis counterpart for leaves *sharded* over the mesh's ``fsdp``
+# axis (dim 0, ZeRO-3 style).  Two wire formats for the gather leg:
+#
+#   * f32   — ``param_gather_axis``: a tiled all-gather of the owner
+#     shards (4 bytes/elt), wrapped in a custom_vjp whose backward is the
+#     grad reduce-scatter, so grads leave ``jax.grad`` already summed AND
+#     sharded back to the owner (the trainer skips its replicated sync
+#     for these leaves).
+#   * payload — ``payload_gather_axis``: each owner quantizes its shard
+#     with the leaf-GLOBAL (alpha, beta) from the StatsBank (the
+#     partials psum over the batch axes makes every shard agree on the
+#     stats; refresh cadence == quantize-at-owner cadence) and gathers
+#     1-byte payloads.  The result is a full-size ``S2FP8Tensor`` that
+#     ``qdot_train`` feeds straight into the payload GEMM operand slot —
+#     no f32/bf16 copy of the leaf ever crosses the wire or lands in HBM.
+#
+# ``FSDPPayloadParam`` is the handoff contract: the trainer wraps each
+# payload-eligible shard in it, the wrapper flows through the user's
+# loss_fn as a pytree leaf, and ``Policy.dot`` / ``qdot_train`` unwrap it
+# at the GEMM.  Any OTHER consumption (embedding lookups, norms, ...)
+# degrades safely: ``__jax_array__`` coerces through the f32 gather with
+# the same reduce-scatter backward.
+
+class FSDPInfo(NamedTuple):
+    """Static (hashable) description of one FSDP-sharded leaf: how to
+    gather it and how to return its gradient.  ``lead_axes`` are the
+    OTHER mapped batch axes (e.g. ``("pod",)``) whose contributions must
+    psum before the reduce-scatter over ``axis``.  ``gather_f32`` is the
+    per-train-step custom_vjp f32 gather (shared so ``__jax_array__``
+    fallbacks get the identical grad path)."""
+    axis: str
+    axis_size: int
+    lead_axes: Tuple[str, ...]
+    grad_mode: str
+    grad_min_size: int
+    grad_backend: Optional[str]
+    gather_f32: Optional[Callable] = None
+
+
+def param_scatter_axis(g: jnp.ndarray, info: FSDPInfo) -> jnp.ndarray:
+    """Reduce a full-size grad leaf back to the owner's shard: psum over
+    the lead batch axes, then reduce-scatter over the fsdp axis (dim 0).
+    This is the sharded half of ``all_reduce == all_gather(reduce_scatter)``
+    — FSDP grads only need to exist at the owner, so the compressed path
+    keeps just the arithmetic (bf16 reduce-scatter) leg and drops the
+    payload all-gather leg entirely."""
+    if info.lead_axes:
+        g = jax.lax.psum(g, info.lead_axes)
+    if info.axis_size == 1:
+        return g
+    route = ("compressed" if info.grad_mode == "s2fp8" and leaf_sync_route(
+        g.shape, g.dtype, info.axis_size, info.grad_min_size) == "compressed"
+        else "plain")
+    wire = jnp.bfloat16 if route == "compressed" else jnp.float32
+    red = jax.lax.psum_scatter(g.astype(wire), info.axis,
+                               scatter_dimension=0, tiled=True)
+    return red.astype(g.dtype)
+
+
+def make_param_gather(info: FSDPInfo) -> Callable:
+    """custom_vjp f32 gather for one FSDP leaf config: forward is a tiled
+    all-gather over dim 0 (shard -> full leaf), backward is
+    :func:`param_scatter_axis` (full cotangent -> owner shard).  Build
+    ONCE per train-step factory so the custom_vjp identity is stable
+    across traces."""
+    @jax.custom_vjp
+    def gather(p_shard):
+        return jax.lax.all_gather(p_shard, info.axis, tiled=True)
+
+    def fwd(p_shard):
+        return gather(p_shard), None
+
+    def bwd(_, g):
+        return (param_scatter_axis(g, info),)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def param_gather_axis(p_shard: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Plain (non-differentiable-boundary) tiled f32 gather of an FSDP
+    shard over dim 0 — 4 bytes/elt on the wire.  For the in-step gather
+    use :func:`make_param_gather` (this is the forward leg only)."""
+    return jax.lax.all_gather(p_shard, axis_name, tiled=True)
+
+
+def payload_gather_axis(q_local: S2FP8Tensor, axis_name: str) -> S2FP8Tensor:
+    """All-gather an S2FP8-quantized FSDP shard into the full-size
+    payload tensor: 1 byte/elt on the wire, stats scalars ride along
+    unchanged (every shard quantized with the same leaf-global (alpha,
+    beta), so the gathered tensor is a single coherent S2FP8Tensor).
+    FP8 payloads move as bitcast u8 — all_gather is pure data movement
+    and some backends reject sub-byte-exponent float element types."""
+    u8 = jax.lax.bitcast_convert_type(q_local.payload, jnp.uint8)
+    full = jax.lax.all_gather(u8, axis_name, tiled=True)
+    payload = jax.lax.bitcast_convert_type(full, q_local.payload.dtype)
+    return S2FP8Tensor(payload=payload, alpha=q_local.alpha,
+                       beta=q_local.beta, fmt=q_local.fmt)
+
+
+class FSDPPayloadParam:
+    """Pytree marker carrying one payload-eligible FSDP shard into the
+    loss function.  Child: the local f32 shard (dim 0 = full / axis_size);
+    static aux: the :class:`FSDPInfo`.  ``qdot_train`` consumes it
+    directly (quantize-at-owner -> payload all-gather -> payload GEMM B
+    slot -> grad reduce-scatter); every other consumption coerces via
+    ``__jax_array__`` through the f32 gather custom_vjp, which keeps the
+    gradient contract identical."""
+
+    def __init__(self, shard, info: FSDPInfo):
+        self.shard = shard
+        self.info = info
+
+    # --- array-like surface (full LOGICAL leaf, not the shard) ---
+    @property
+    def shape(self):
+        return (self.shard.shape[0] * self.info.axis_size,) \
+            + tuple(self.shard.shape[1:])
+
+    @property
+    def ndim(self):
+        return self.shard.ndim
+
+    @property
+    def dtype(self):
+        return self.shard.dtype
+
+    def __jax_array__(self):
+        if self.info.gather_f32 is None:
+            return param_gather_axis(self.shard, self.info.axis)
+        return self.info.gather_f32(self.shard)
+
+    def astype(self, dtype):
+        return self.__jax_array__().astype(dtype)
+
+    def __getitem__(self, idx):
+        return self.__jax_array__()[idx]
+
+    @property
+    def T(self):
+        # e.g. tied-embedding lm heads (`params["embed"].T`): a transposed
+        # B slot can't stream the row-sharded payload, so it takes the f32
+        # gather like any other non-GEMM consumption
+        return self.__jax_array__().T
+
+    def __repr__(self):
+        return (f"FSDPPayloadParam(shard={self.shard.shape}, "
+                f"full={self.shape}, axis={self.info.axis!r}"
+                f"x{self.info.axis_size})")
+
+
+jax.tree_util.register_pytree_node(
+    FSDPPayloadParam,
+    lambda p: ((p.shard,), p.info),
+    lambda info, children: FSDPPayloadParam(children[0], info))
 
 
 # ---------------------------------------------------------------------------

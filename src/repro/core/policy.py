@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend as nbackend
+from repro.core import collectives as collectives_mod
 from repro.core import qdot as qdot_mod
 from repro.core import s2fp8
 from repro.core import statsbank
@@ -175,6 +176,12 @@ class Policy:
     def truncate(self, x: jnp.ndarray) -> jnp.ndarray:
         """Tensor-level truncation at op boundaries (bidirectional: the
         cotangent is truncated too for fp8/s2fp8 modes)."""
+        if isinstance(x, collectives_mod.FSDPPayloadParam):
+            # a truncation SITE is not a GEMM B slot: gather f32 first so
+            # the site's custom_vjp sees the full leaf (its cotangent then
+            # reduce-scatters through the gather's backward, keeping the
+            # bwd shape contract on the shard)
+            x = jnp.asarray(x)
         return self._wrap(x)
 
     def _wrap_out(self, y):
@@ -195,7 +202,21 @@ class Policy:
     # operands (f32 weights x bf16 activations) follow the contraction's
     # own promotion on every API (dot == dot_general == einsum) instead
     # of silently downcasting to the first operand.
+    #
+    # FSDP payload handoff (core/collectives.FSDPPayloadParam): the
+    # quantized-FSDP trainer passes payload-eligible param shards wrapped
+    # in a pytree marker exposing the FULL logical shape.  ``dot`` streams
+    # them through ``qdot_train`` as 1-byte gathered payloads; every other
+    # consumption (planned einsum/dot_general, norms, lookups) coerces via
+    # the wrapper's ``__jax_array__`` f32 gather — correct gradients
+    # either way, the payload wire is the dot-family fast path.
     def dot(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        if isinstance(b, collectives_mod.FSDPPayloadParam):
+            if self._qdot_routable(a, b):
+                y = qdot_mod.qdot_train(a, b, backend=self.backend,
+                                        fmt=self._fmt)
+                return self._qdot_out(y, jnp.result_type(a.dtype, b.dtype))
+            b = jnp.asarray(b)          # f32 gather fallback
         if self._qdot_routable(a, b):
             y = qdot_mod.qdot_train(a, b, backend=self.backend, fmt=self._fmt)
             return self._qdot_out(y, jnp.result_type(a, b))
@@ -204,6 +225,8 @@ class Policy:
         return self._wrap_out(y).astype(jnp.result_type(a, b))
 
     def dot_general(self, a, b, dimension_numbers) -> jnp.ndarray:
+        if isinstance(b, collectives_mod.FSDPPayloadParam):
+            b = jnp.asarray(b)          # f32 gather fallback
         # one support-check source: the backend planner.  Everything it
         # maps — dense, batched, NT/TN orientations — runs payload-domain;
         # contractions outside the planned family keep the composed
@@ -226,6 +249,9 @@ class Policy:
         # whitelist): any two-operand contraction the batched payload
         # kernels execute — dense, batched (MoE ecd,edf), broadcast-on-B
         # (becd,edf), attention score/value — goes payload-domain.
+        operands = tuple(
+            jnp.asarray(o) if isinstance(o, collectives_mod.FSDPPayloadParam)
+            else o for o in operands)   # f32 gather fallback
         if len(operands) == 2 and self.uses_payload_gemm:
             plan = nbackend.plan_einsum(spec, operands[0].shape,
                                         operands[1].shape)

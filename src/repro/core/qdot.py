@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend as nbackend
+from repro.core import collectives
 from repro.core import s2fp8
 from repro.core import statsbank
 from repro.core.backend import QdotPlan
@@ -138,11 +139,24 @@ def _gemm_structure(plan: Optional[QdotPlan]):
 
 @functools.lru_cache(maxsize=None)
 def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
-                 plan: Optional[QdotPlan] = None):
+                 plan: Optional[QdotPlan] = None,
+                 fsdp: Optional[collectives.FSDPInfo] = None):
     """custom_vjp payload GEMM over (a2, b2, entry, pred_f, step_f); cached
-    per (backend, fmt, cfg, plan) so the callable is stable under jit
-    tracing.  The bank entry is a differentiated argument whose cotangent
-    is the refreshed entry (the StatsBank update idiom)."""
+    per (backend, fmt, cfg, plan, fsdp) so the callable is stable under
+    jit tracing.  The bank entry is a differentiated argument whose
+    cotangent is the refreshed entry (the StatsBank update idiom).
+
+    With ``fsdp`` (the quantized-FSDP payload handoff), ``b`` is the
+    owner's dim-0 SHARD of the logical B operand.  Its ``b.fwd`` stats
+    refresh psums partials over ``cfg.axis_name`` exactly as in the
+    replicated case — the shards partition the leaf over the fsdp axis,
+    so the psum'd stats ARE the leaf-global (alpha, beta) and every owner
+    quantizes coherently ("quantize-at-owner", once per refresh
+    interval).  The 1-byte payload then all-gathers into the full GEMM B
+    slot (never an f32/bf16 copy), and the backward reduce-scatters dB to
+    the owner shard (psum over lead batch axes + psum_scatter over the
+    fsdp axis; bf16 leg when the leaf routes compressed), so the b
+    cotangent exits shard-shaped and pre-synced."""
     target_max = s2fp8.FMT_TARGET_MAX[fmt]
     layout, da_spec, db_spec = _gemm_structure(plan)
 
@@ -154,6 +168,8 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
             b, entry["b.fwd"], pred_f, step_f, cfg, target_max, backend, fmt=fmt)
         qa = be.quantize(a, stats=(aa, ab), fmt=fmt)
         qb = be.quantize(b, stats=(ba, bb), fmt=fmt)
+        if fsdp is not None:
+            qb = collectives.payload_gather_axis(qb, fsdp.axis)
         y, new_of = _epilogue_qmatmul(qa, qb, layout, entry["out.fwd"],
                                       pred_f, step_f, cfg, fmt, backend,
                                       target_max)
@@ -184,6 +200,12 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
         dB, new_bb = _epilogue_qmatmul(ops[dl], ops[dr], dlay, b_bwd,
                                        pred_f, step_f, cfg, fmt, backend,
                                        target_max, out_batch=dob)
+        if fsdp is not None:
+            # full local dB -> owner shard: psum lead batch axes +
+            # reduce-scatter over the fsdp axis.  The b cotangent leaves
+            # jax.grad pre-synced; the trainer's replicated grad sync
+            # skips this leaf.
+            dB = collectives.param_scatter_axis(dB, fsdp)
         entry_cot = {"a.fwd": new_af, "a.bwd": new_ab, "b.fwd": new_bf,
                      "b.bwd": new_bb, "out.fwd": new_of, "out.bwd": new_ob}
         return (dA, dB, entry_cot,
@@ -249,8 +271,32 @@ def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
     per-direction states, zero steady-state reductions); outside — and in
     discovery traces — exact per-call stats.  Returns f32 (the caller
     casts, matching ``Policy.dot``).
+
+    ``b`` may be a :class:`repro.core.collectives.FSDPPayloadParam` (the
+    quantized-FSDP handoff, dense family only): the local shard quantizes
+    with leaf-global bank stats and all-gathers as a 1-byte payload into
+    the GEMM B slot — no f32/bf16 copy of the leaf is ever materialized —
+    and the b gradient exits reduce-scattered to the owner shard.
+    Requires an active (non-discovery) session whose StatsConfig
+    ``axis_name`` covers the fsdp axis (the leaf-global stats contract).
     """
-    if plan is None:
+    fsdp = None
+    if isinstance(b, collectives.FSDPPayloadParam):
+        if plan is not None:
+            raise ValueError("FSDP payload operands support the dense "
+                             "[..., K] x [K, N] family only (planned/"
+                             "batched contractions coerce through the "
+                             "f32 gather in Policy)")
+        fsdp = b.info
+        b = b.shard
+        k_full = b.shape[0] * fsdp.axis_size
+        if b.ndim != 2 or a.ndim < 1 or a.shape[-1] != k_full:
+            raise ValueError(f"qdot_train wants [..., K] x [K, N]; got "
+                             f"{a.shape} x FSDP shard {b.shape} "
+                             f"(full K = {k_full})")
+        out_shape = a.shape[:-1] + (b.shape[-1],)
+        a2_shape, b2_shape = (-1, a.shape[-1]), b.shape
+    elif plan is None:
         if b.ndim != 2 or a.ndim < 1 or a.shape[-1] != b.shape[0]:
             raise ValueError(f"qdot_train wants [..., K] x [K, N]; got "
                              f"{a.shape} x {b.shape}")
@@ -264,6 +310,18 @@ def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
     a2 = a.reshape(a2_shape).astype(jnp.float32)
     b2 = b.reshape(b2_shape).astype(jnp.float32)
     sess = statsbank.current_session()
+    if fsdp is not None:
+        if sess is None or sess.discovery:
+            raise ValueError(
+                "FSDP payload operands need an active StatsBank session "
+                "(make_train_step(param_sharding='fsdp_q', stats=...)); "
+                "discovery traces see full unwrapped params")
+        axes = sess.cfg.axis_name
+        axes = (axes,) if isinstance(axes, str) else tuple(axes or ())
+        if fsdp.axis not in axes:
+            raise ValueError(
+                f"fsdp_q needs leaf-global stats: StatsConfig.axis_name "
+                f"{axes!r} must include the fsdp axis {fsdp.axis!r}")
     if sess is None:
         y2 = _qdot_exact(backend, fmt, plan)(a2, b2)
     elif sess.discovery:
@@ -274,7 +332,7 @@ def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
         y2 = _qdot_exact(backend, fmt, plan)(a2, b2)
     else:
         entry = sess.qdot_site()
-        y2 = _qdot_banked(backend, fmt, sess.cfg, plan)(
+        y2 = _qdot_banked(backend, fmt, sess.cfg, plan, fsdp)(
             a2, b2, entry, sess.pred_f, sess.step_f)
     return y2.reshape(out_shape)
 

@@ -26,7 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, SHAPES, SHAPE_SPECS, get_config
 from repro.core.policy import make_policy
-from repro.launch import api
+from repro.launch import api, memplan
 from repro.launch.mesh import make_production_mesh, axis_sizes
 from repro.parallel import sharding as shd
 from repro.roofline import analysis as roofline
@@ -197,7 +197,20 @@ def main():
     ap.add_argument("--truncate-output", default=None, choices=[None, "0", "1"])
     ap.add_argument("--tag", default="", help="suffix for the results key "
                     "(perf-iteration label, e.g. 'flash')")
+    ap.add_argument("--mem-report", action="store_true",
+                    help="print the per-device param/optimizer residency "
+                         "plan (launch/memplan.py) for the selected archs "
+                         "under replicated/fsdp/fsdp_q and exit — no "
+                         "compilation; the fits verdict uses the "
+                         "trainer's own per-leaf eligibility rules")
     args = ap.parse_args()
+
+    if args.mem_report:
+        archs = LM_ARCHS if (args.all or args.arch is None) else [args.arch]
+        sizes = ({"pod": 2, "data": 16, "model": 16}
+                 if args.mesh == "multi" else {"data": 16, "model": 16})
+        print(memplan.format_report(archs, sizes))
+        return
     overrides = {}
     if args.attn_impl:
         overrides["attn_impl"] = args.attn_impl

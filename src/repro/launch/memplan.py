@@ -1,0 +1,204 @@
+"""Per-leaf HBM residency planner for the FSDP param-sharding modes.
+
+Answers "does this arch's param + optimizer store fit per chip?" WITHOUT
+compiling anything, by applying the trainer's own sharding/eligibility
+rules (parallel/sharding.py) to the abstract param tree:
+
+  * ``replicated`` — every device stores the full f32 master + both adamw
+    moments: 12 bytes/element.
+  * ``fsdp``       — eligible leaves (float, dim 0 divisible by the fsdp
+    axis) store 1/n_shards of that, plus a transient full-size f32
+    all-gather (4 bytes/element) while the leaf's GEMM consumes it.
+  * ``fsdp_q``     — same sharded store, but payload-eligible leaves
+    (rank 2, the GEMM B slots) gather as S2FP8 payloads: 1 byte/element
+    + 8 bytes of (alpha, beta) stats riding along.  Non-payload eligible
+    leaves still gather f32.
+
+The gather term is reported both as a per-leaf PEAK (the just-in-time
+schedule frees each gathered leaf after its GEMMs — the steady-state
+working set holds one big leaf) and as a SUM (the pessimistic
+everything-live bound).  Activations/temps are out of scope — this plans
+the param/optimizer store the ISSUE's FSDP refactor moves, the rest is
+dryrun.py's compiled memory_analysis.
+
+Import-safe: pure shape arithmetic; nothing here initializes a jax
+backend, so launch/dryrun.py can import it before pinning XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, Tuple
+
+HBM_PER_CHIP_GB = 16.0        # TPU v5e (roofline/analysis.py's target part)
+PAYLOAD_STATS_BYTES = 8       # f32 (alpha, beta) per payload leaf
+MODES = ("replicated", "fsdp", "fsdp_q")
+
+_FLOAT_DTYPES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+
+
+def _dtype_name(dtype) -> str:
+    # accepts np.dtype objects (.name), scalar types like jnp.float32
+    # (.__name__), and plain strings
+    return (getattr(dtype, "name", None)
+            or getattr(dtype, "__name__", None) or str(dtype))
+
+
+def _itemsize(dtype) -> int:
+    name = _dtype_name(dtype)
+    if name in _FLOAT_DTYPES:
+        return _FLOAT_DTYPES[name]
+    if "int8" in name or "uint8" in name or "bool" in name:
+        return 1
+    if "16" in name:
+        return 2
+    if "64" in name:
+        return 8
+    return 4
+
+
+def leaf_eligible(shape: Tuple[int, ...], dtype, n_shards: int) -> bool:
+    """Mirror of sharding.fsdp_leaf_eligible without touching jax: float
+    dtype, rank >= 1, dim 0 divisible by the fsdp axis size."""
+    if _dtype_name(dtype) not in _FLOAT_DTYPES:
+        return False
+    if len(shape) == 0 or shape[0] == 0:
+        return False
+    return shape[0] % n_shards == 0
+
+
+def payload_eligible(shape: Tuple[int, ...], dtype, n_shards: int) -> bool:
+    """The trainer streams payloads only for rank-2 eligible leaves (the
+    GEMM B slots qdot_train consumes)."""
+    return leaf_eligible(shape, dtype, n_shards) and len(shape) == 2
+
+
+@dataclasses.dataclass
+class LeafPlan:
+    n_elements: int
+    store_bytes: int          # per-device persistent store (one copy)
+    gather_bytes: int         # transient full-size residency while live
+    sharded: bool
+    payload: bool
+
+
+def plan_leaf(shape: Tuple[int, ...], dtype, n_shards: int,
+              mode: str) -> LeafPlan:
+    """Byte plan for ONE param (or moment) leaf under a sharding mode."""
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    n = int(math.prod(shape)) if shape else 1
+    item = _itemsize(dtype)
+    elig = n_shards > 1 and leaf_eligible(shape, dtype, n_shards) \
+        and mode != "replicated"
+    pay = elig and mode == "fsdp_q" and payload_eligible(shape, dtype,
+                                                        n_shards)
+    store = n * item // n_shards if elig else n * item
+    if not elig:
+        gather = 0                       # already resident full-size
+    elif pay:
+        gather = n * 1 + PAYLOAD_STATS_BYTES
+    else:
+        gather = n * item
+    return LeafPlan(n_elements=n, store_bytes=store, gather_bytes=gather,
+                    sharded=elig, payload=pay)
+
+
+def plan_leaves(leaves: Iterable[Tuple[Tuple[int, ...], object]],
+                n_shards: int, mode: str,
+                with_gather: bool = True) -> Dict[str, int]:
+    """Aggregate plan over (shape, dtype) leaves.  ``with_gather=False``
+    for optimizer moments: updates run shard-local (ZeRO-3), the moments
+    are never gathered."""
+    out = {"store_bytes": 0, "gather_peak_bytes": 0, "gather_sum_bytes": 0,
+           "n_leaves": 0, "n_sharded": 0, "n_payload": 0}
+    for shape, dtype in leaves:
+        lp = plan_leaf(tuple(shape), dtype, n_shards, mode)
+        out["store_bytes"] += lp.store_bytes
+        if with_gather:
+            out["gather_peak_bytes"] = max(out["gather_peak_bytes"],
+                                           lp.gather_bytes)
+            out["gather_sum_bytes"] += lp.gather_bytes
+        out["n_leaves"] += 1
+        out["n_sharded"] += int(lp.sharded)
+        out["n_payload"] += int(lp.payload)
+    return out
+
+
+def _tree_leaves(tree):
+    """(shape, dtype) pairs from a pytree of arrays/ShapeDtypeStructs.
+    Imported lazily: jax import is safe, but keep module import free of
+    it for symmetry with launch/mesh.py's no-device-state contract."""
+    import jax
+    return [(tuple(l.shape), l.dtype)
+            for l in jax.tree_util.tree_leaves(tree)]
+
+
+def plan_state(param_tree, opt_tree, n_shards: int, mode: str) -> dict:
+    """Full param + optimizer plan for one device.
+
+    ``steady_bytes``: persistent store (params + moments).
+    ``peak_bytes``: steady + the largest single transient gather.
+    """
+    p = plan_leaves(_tree_leaves(param_tree), n_shards, mode)
+    o = plan_leaves(_tree_leaves(opt_tree), n_shards, mode,
+                    with_gather=False)
+    steady = p["store_bytes"] + o["store_bytes"]
+    return {
+        "mode": mode, "n_shards": n_shards,
+        "param_store_bytes": p["store_bytes"],
+        "opt_store_bytes": o["store_bytes"],
+        "steady_bytes": steady,
+        "gather_peak_bytes": p["gather_peak_bytes"],
+        "gather_sum_bytes": p["gather_sum_bytes"],
+        "peak_bytes": steady + p["gather_peak_bytes"],
+        "n_leaves": p["n_leaves"], "n_sharded": p["n_sharded"],
+        "n_payload": p["n_payload"],
+    }
+
+
+def fsdp_shards_of(axis_sizes: Dict[str, int]) -> int:
+    """fsdp-axis size for a mesh's {axis: size} dict under TRAIN_RULES
+    (the ``data`` axis carries the fsdp logical axis — launch/mesh.py)."""
+    return int(axis_sizes.get("data", 1))
+
+
+def plan_arch(arch: str, n_shards: int, mode: str = "fsdp_q",
+              hbm_gb: float = HBM_PER_CHIP_GB) -> dict:
+    """Plan one arch config's train-time store (f32 masters + adamw
+    moments, paper Fig. 4) and render the fits-or-not verdict."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch import api
+    from repro.optim import optimizers
+
+    cfg = get_config(arch)
+    pstruct = api.param_struct(cfg)
+    ostruct = jax.eval_shape(optimizers.adamw().init, pstruct)
+    plan = plan_state(pstruct, ostruct, n_shards, mode)
+    plan["arch"] = arch
+    plan["hbm_gb"] = hbm_gb
+    plan["fits"] = plan["peak_bytes"] <= hbm_gb * 2**30
+    return plan
+
+
+def format_report(archs, axis_sizes: Dict[str, int],
+                  hbm_gb: float = HBM_PER_CHIP_GB) -> str:
+    """Residency table (GB/device) across all three modes per arch."""
+    n = fsdp_shards_of(axis_sizes)
+    gb = 2**30
+    lines = [f"[memplan] fsdp axis: {n}-way 'data' "
+             f"({dict(axis_sizes)}), HBM {hbm_gb:.0f} GB/chip",
+             f"{'arch':<22}{'mode':<12}{'params':>9}{'opt':>9}"
+             f"{'gather':>9}{'peak':>9}  fits"]
+    for arch in archs:
+        for mode in MODES:
+            p = plan_arch(arch, n, mode, hbm_gb)
+            lines.append(
+                f"{arch:<22}{mode:<12}"
+                f"{p['param_store_bytes'] / gb:>8.2f}G"
+                f"{p['opt_store_bytes'] / gb:>8.2f}G"
+                f"{p['gather_peak_bytes'] / gb:>8.2f}G"
+                f"{p['peak_bytes'] / gb:>8.2f}G"
+                f"  {'yes' if p['fits'] else 'NO'}")
+    return "\n".join(lines)

@@ -3,6 +3,13 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state (jax locks the device count on first backend init — dryrun.py sets
 XLA_FLAGS before importing anything else).
+
+Axis contract: the ``data`` axis carries both the batch AND (under the
+launchers' ``--shard-params`` FSDP modes) the param/optimizer shards —
+``parallel/sharding.py``'s TRAIN_RULES maps the logical ``fsdp`` axis to
+``data``, so every mesh built here supports ZeRO-3 sharding with no extra
+axis.  Multi-host meshes additionally need ``jax.distributed.initialize``
+before any builder runs (ROADMAP: multi-host FSDP remainder).
 """
 from __future__ import annotations
 

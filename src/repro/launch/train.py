@@ -33,6 +33,7 @@ from repro.optim import optimizers, schedules
 from repro.parallel import sharding as shd
 from repro.training import chaos as chaos_mod
 from repro.training import guard as guard_mod
+from repro.training import trainer as trainer_mod
 from repro.training.trainer import TrainLoop, make_train_step
 
 
@@ -73,6 +74,22 @@ def main():
                          "f32 psum, or the S2FP8-compressed reduce-scatter"
                          "/all-gather schedule (core/collectives.py) for "
                          "every compressible leaf")
+    ap.add_argument("--grad-sync-min-size", type=int, default=1 << 16,
+                    help="element-count floor below which a gradient leaf "
+                         "takes the exact f32 path even under s2fp8 sync "
+                         "(stats overhead dominates small leaves; also the "
+                         "floor for the FSDP compressed scatter leg)")
+    ap.add_argument("--shard-params", default="replicated",
+                    choices=trainer_mod.PARAM_SHARDING_MODES,
+                    help="param/optimizer placement under the mesh: "
+                         "'replicated' (every device holds full copies), "
+                         "'fsdp' (ZeRO-3: leaves shard dim 0 over the "
+                         "fsdp axis, f32 all-gather just-in-time, grads "
+                         "reduce-scatter back), or 'fsdp_q' (gather "
+                         "S2FP8 *payloads* — 1 byte/elt on the wire — "
+                         "straight into the banked GEMMs; requires "
+                         "--stats-refresh-every and a payload-GEMM "
+                         "policy)")
     ap.add_argument("--track-stats", action="store_true")
     ap.add_argument("--stats-refresh-every", type=int, default=0,
                     help="enable the jit-carried StatsBank: refresh the "
@@ -182,29 +199,42 @@ def main():
               f"(warmup {guard_cfg.warmup}), sat_threshold "
               f"{guard_cfg.sat_threshold}"
               + (f", chaos: {args.chaos}" if chaos_plan else ""))
+    if args.shard_params != "replicated":
+        if mesh is None:
+            raise SystemExit("--shard-params needs a mesh (--mesh != none)")
+        if args.shard_params == "fsdp_q" and stats_cfg is None:
+            raise SystemExit("--shard-params fsdp_q streams payloads into "
+                             "the banked GEMMs: add --stats-refresh-every "
+                             "(and an s2fp8 payload-GEMM policy)")
     step_fn = make_train_step(loss_fn, opt, sched, pol,
                               track_stats=args.track_stats,
                               stats=stats_cfg, mesh=mesh,
                               grad_sync_mode=args.grad_sync,
-                              telemetry=telemetry, guard=guard_cfg)
+                              grad_sync_min_size=args.grad_sync_min_size,
+                              telemetry=telemetry, guard=guard_cfg,
+                              param_sharding=args.shard_params)
     if mesh is not None:
         n_shards = 1
         for a in ("pod", "data"):
             n_shards *= sizes.get(a, 1)
         print(f"[train] mesh {dict(sizes)}: {n_shards}-way data-parallel "
-              f"step, grad sync {args.grad_sync}")
+              f"step, grad sync {args.grad_sync}, params "
+              f"{args.shard_params}"
+              + (f" ({shd.fsdp_axis_size(mesh)}-way over "
+                 f"'{shd.fsdp_axis_entry(mesh)}')"
+                 if args.shard_params != "replicated" else ""))
         if args.batch % n_shards != 0:
             print(f"[train] WARNING: --batch {args.batch} does not divide "
                   f"the {n_shards}-way data axis — the divisibility guard "
                   f"will REPLICATE the batch (every device computes the "
                   f"full batch; no data-parallel speedup)")
         if sizes.get("model", 1) > 1:
-            print(f"[train] WARNING: the shard_map train step is "
-                  f"data-parallel only — params/optimizer state are "
-                  f"REPLICATED across the {sizes['model']}-way model axis "
-                  f"and its devices run duplicate compute (TP/FSDP inside "
-                  f"the step is a ROADMAP item); size the mesh as Nx1 to "
-                  f"use every device for data")
+            print(f"[train] WARNING: the shard_map train step parallelizes "
+                  f"the batch and (with --shard-params) the param store "
+                  f"over the data axis only — the {sizes['model']}-way "
+                  f"model axis runs duplicate compute (TP inside the step "
+                  f"is a ROADMAP item); size the mesh as Nx1 to use every "
+                  f"device for data")
 
     table = synthetic.make_markov_table(args.seed, cfg.vocab) \
         if not cfg.enc_dec else None

@@ -11,11 +11,15 @@ params apply verbatim to optimizer state (ZeRO-style).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+_fsdp_scope = threading.local()
 
 
 class OptState(NamedTuple):
@@ -34,17 +38,61 @@ def _zeros_like_f32(params):
     return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
+@contextlib.contextmanager
+def fsdp_grads(axis_name, sharded):
+    """Declare that some leaves of the gradient/param trees flowing into
+    :func:`global_norm` / :func:`clip_by_global_norm` are FSDP-SHARDED
+    over ``axis_name`` (``sharded``: a bool pytree matching the trees,
+    True = that leaf is a dim-0 shard of the logical leaf).
+
+    The mesh-native train step (training/trainer.py,
+    ``param_sharding="fsdp"/"fsdp_q"``) wraps ``optimizer.update`` and its
+    grad-norm metric in this scope, so an optimizer built with
+    ``clip_axis_name=None`` computes the MIXED global norm without any
+    signature change: sharded-leaf sum-of-squares partials psum over the
+    fsdp axis, replicated leaves count once.  Trace-time (threadlocal)
+    state — the scope must be active while the update is being traced."""
+    prev = getattr(_fsdp_scope, "v", None)
+    _fsdp_scope.v = (axis_name, sharded,
+                     jax.tree_util.tree_structure(sharded))
+    try:
+        yield
+    finally:
+        _fsdp_scope.v = prev
+
+
 def global_norm(tree, axis_name=None) -> jnp.ndarray:
     """L2 norm over every leaf of ``tree``.
 
     ``axis_name`` makes it correct inside ``shard_map``/``pmap`` when the
-    leaves are per-shard PARTIALS (e.g. gradients before the DP sync, or
-    FSDP-sharded grads): the per-shard sum of squares is psum'd across
-    the mapped axis (a name or tuple of names) before the sqrt, so every
-    shard sees the GLOBAL norm.  Leave it None for replicated trees —
-    post-sync gradients in the mesh-native train step are already global,
-    and a psum there would double-count.
+    leaves are per-shard PARTIALS (e.g. gradients before the DP sync):
+    the per-shard sum of squares is psum'd across the mapped axis (a name
+    or tuple of names) before the sqrt, so every shard sees the GLOBAL
+    norm.  Leave it None for replicated trees — post-sync gradients in
+    the mesh-native train step are already global, and a psum there would
+    double-count.
+
+    Inside an active :func:`fsdp_grads` scope (and with ``axis_name``
+    None), a tree whose structure matches the scope's bool tree gets the
+    mixed treatment: sharded leaves psum their sum-of-squares over the
+    scope's fsdp axis, replicated leaves stay local.
     """
+    scope = getattr(_fsdp_scope, "v", None)
+    if axis_name is None and scope is not None \
+            and jax.tree_util.tree_structure(tree) == scope[2]:
+        fsdp_axis, sharded, _ = scope
+        flags = jax.tree_util.tree_leaves(sharded)
+        leaves = jax.tree_util.tree_leaves(tree)
+        sq_shard = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x, f in zip(leaves, flags) if f]
+        sq_rep = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+                  for x, f in zip(leaves, flags) if not f]
+        sq = jnp.zeros((), jnp.float32)
+        if sq_shard:
+            sq = sq + jax.lax.psum(jnp.sum(jnp.stack(sq_shard)), fsdp_axis)
+        if sq_rep:
+            sq = sq + jnp.sum(jnp.stack(sq_rep))
+        return jnp.sqrt(sq)
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
               for x in jax.tree_util.tree_leaves(tree)]
     sq = jnp.sum(jnp.stack(leaves))

@@ -255,20 +255,89 @@ def mesh_batch_specs(tree, mesh):
     return jax.tree_util.tree_map(spec, tree)
 
 
+def fsdp_axis_entry(mesh) -> Optional[str]:
+    """The physical mesh axis carrying the ``fsdp`` logical axis under the
+    active rule table (``TRAIN_RULES`` when none is active), or None when
+    the mesh has no such axis.  The rule table maps fsdp to a single
+    physical axis (``data``); param/opt leaves shard dim 0 over it."""
+    rules = _rules() or TRAIN_RULES
+    phys = rules.get("fsdp") or ()
+    axes = tuple(a for a in phys if a in mesh.axis_names)
+    return axes[0] if axes else None
+
+
+def fsdp_axis_size(mesh) -> int:
+    """Size of the fsdp-carrying mesh axis (1 when the mesh has none)."""
+    axis = fsdp_axis_entry(mesh)
+    return mesh.shape[axis] if axis is not None else 1
+
+
+def fsdp_leaf_eligible(shape, dtype, axis_size: int) -> bool:
+    """Whether one param/opt leaf shards over the fsdp axis: float dtype
+    (integer leaves like the opt step counter stay replicated — they are
+    0-d anyway), rank >= 1, and dim 0 divisible by the axis size.  Pure
+    function of static shape/dtype so the trainer evaluates it OUTSIDE
+    the shard_map (inside, dim 0 is already divided and the predicate
+    would be ambiguous) and per-leaf specs/gathers stay in lockstep."""
+    import jax.numpy as jnp
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return False
+    if len(shape) == 0 or shape[0] == 0:
+        return False
+    return shape[0] % axis_size == 0
+
+
+def fsdp_param_specs(tree, mesh):
+    """Per-leaf PartitionSpecs sharding dim 0 of every eligible param (or
+    optimizer-state) leaf over the fsdp axis; ineligible leaves replicate.
+    Applied per-leaf (unlike the batch's all-or-nothing guard): each param
+    leaf gathers/scatters independently, so a non-divisible bias staying
+    replicated next to a sharded weight is correct by construction."""
+    axis = fsdp_axis_entry(mesh)
+    if axis is None:
+        return jax.tree_util.tree_map(lambda _: P(), tree)
+    n = mesh.shape[axis]
+
+    def spec(leaf):
+        if fsdp_leaf_eligible(leaf.shape, leaf.dtype, n):
+            return P(axis)
+        return P()
+
+    return jax.tree_util.tree_map(spec, tree)
+
+
 def train_step_specs(batch, mesh, with_stats: bool = False,
-                     with_guard: bool = False):
+                     with_guard: bool = False,
+                     param_sharding: str = "replicated",
+                     params=None, opt_state=None):
     """(in_specs, out_specs) for the mesh-native train step's shard_map.
 
-    The step is data-parallel: params / optimizer state / StatsBank carry
-    / StepGuard carry / step counter are replicated (the ``resolve`` rule
-    table maps every param of the DP step to ``P()``; FSDP/TP spec
-    resolution stays the pjit launchers' job), the batch shards per
-    :func:`mesh_batch_specs`, and every output — post-sync
-    params/opt/bank/guard and psum'd metrics — is replicated.  The guard
-    carry rides after the bank: both are tiny scalar pytrees whose values
-    are identical on every shard (they integrate post-psum globals)."""
+    The step is data-parallel: StatsBank carry / StepGuard carry / step
+    counter are replicated, the batch shards per :func:`mesh_batch_specs`,
+    and metrics/bank/guard outputs are replicated (tiny scalar pytrees
+    whose values are identical on every shard — they integrate post-psum
+    globals).  The guard carry rides after the bank.
+
+    Params and optimizer state are replicated (``P()``) in the default
+    ``param_sharding="replicated"`` mode.  Under ``"fsdp"``/``"fsdp_q"``
+    they shard dim 0 over the rule table's fsdp axis per
+    :func:`fsdp_param_specs` (pass the concrete ``params``/``opt_state``
+    trees so per-leaf eligibility resolves) — the step then gathers
+    just-in-time inside the differentiated loss and reduce-scatters grads
+    back, so the updated leaves come OUT sharded too."""
     # params, opt_state[, bank][, guard]
     carry = 2 + int(with_stats) + int(with_guard)
-    in_specs = (P(),) * carry + (mesh_batch_specs(batch, mesh), P())
-    out_specs = (P(),) * (carry + 1)        # carry + metrics
+    tail = int(with_stats) + int(with_guard)
+    if param_sharding == "replicated":
+        carry_in = (P(), P())
+    else:
+        if params is None or opt_state is None:
+            raise ValueError("param_sharding != 'replicated' needs the "
+                             "concrete params/opt_state trees for per-leaf "
+                             "spec resolution")
+        carry_in = (fsdp_param_specs(params, mesh),
+                    fsdp_param_specs(opt_state, mesh))
+    in_specs = carry_in + (P(),) * tail \
+        + (mesh_batch_specs(batch, mesh), P())
+    out_specs = carry_in + (P(),) * (tail + 1)      # carry + metrics
     return in_specs, out_specs

@@ -27,6 +27,7 @@ batch-MEAN loss (every loss in models/ does).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Optional
 
 import jax
@@ -39,6 +40,7 @@ from repro.core import s2fp8
 from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.obs import telemetry as obs_telemetry
+from repro.optim import optimizers as optim_mod
 from repro.optim.optimizers import Optimizer, global_norm
 from repro.parallel import sharding as shd
 from repro.training import chaos as chaos_mod
@@ -46,6 +48,7 @@ from repro.training import fault
 from repro.training import guard as guard_mod
 
 GRAD_SYNC_MODES = ("f32", "s2fp8")
+PARAM_SHARDING_MODES = ("replicated", "fsdp", "fsdp_q")
 
 
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
@@ -57,7 +60,8 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     grad_sync_min_size: int = 1 << 16,
                     grad_sync_backend: Optional[str] = None,
                     telemetry: Optional[obs_telemetry.Telemetry] = None,
-                    guard: Optional[guard_mod.GuardConfig] = None):
+                    guard: Optional[guard_mod.GuardConfig] = None,
+                    param_sharding: str = "replicated"):
     """loss_fn(params, batch, policy) -> (loss, metrics_dict).
 
     * fp8_ls mode: loss scaled by policy.loss_scale before grad, grads
@@ -120,6 +124,31 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
       is unchanged: fp32 baseline + 1 outside ``lax.cond``.  Build the
       carry with ``guard.init_state()``.
 
+    * param_sharding: how param and optimizer leaves live on the mesh.
+      ``"replicated"`` (default) — every device holds full copies, as
+      before.  ``"fsdp"`` — eligible leaves (float, rank >= 1, dim 0
+      divisible by the fsdp axis size; ``sharding.fsdp_leaf_eligible``)
+      shard dim 0 over the rule table's fsdp axis, ZeRO-3 style: the step
+      all-gathers each leaf just-in-time INSIDE the differentiated loss
+      (f32 wire), the gather's custom_vjp reduce-scatters the gradient
+      back to the owner shard (psum over the other batch axes first; the
+      compressed ``grad_sync_mode="s2fp8"`` path becomes just its bf16
+      reduce-scatter leg, routed per leaf by ``leaf_sync_route`` on the
+      FULL leaf shape), and the optimizer update runs shard-local —
+      ``clip_by_global_norm`` sees the mixed global norm through the
+      ``optim.optimizers.fsdp_grads`` scope.  ``"fsdp_q"`` — additionally
+      streams payload-eligible leaves (2-D, consumed by ``Policy.dot``)
+      as S2FP8 *payloads*: quantize-at-owner with leaf-global bank stats,
+      1-byte all-gather straight into the payload GEMM B slot (no
+      f32/bf16 copy of the leaf materializes; jaxpr-asserted in
+      tests/test_mesh_train.py), other consumption of a wrapped leaf
+      falls back to the f32 gather via ``FSDPPayloadParam.__jax_array__``.
+      Non-replicated modes need ``mesh`` with an fsdp-carrying axis;
+      ``fsdp_q`` additionally needs ``stats`` and a payload-GEMM policy.
+      Updated params/opt leaves come OUT of the step sharded
+      (``sharding.fsdp_param_specs``); checkpoints still gather to full
+      host arrays, so save/restore stays topology-agnostic.
+
     A ``batch["_chaos"]`` entry (attached by ``training/chaos.py``'s
     data_fn wrapper) is popped off the batch inside the step and drives
     the in-trace fault injectors (NaN grads / Inf loss / forced reject)
@@ -142,6 +171,10 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
         raise ValueError("mesh=... builds its own gradient sync; the "
                          "legacy grad_sync callable must be None")
 
+    if param_sharding not in PARAM_SHARDING_MODES:
+        raise ValueError(f"param_sharding must be one of "
+                         f"{PARAM_SHARDING_MODES}, got {param_sharding!r}")
+
     batch_axes = shd.mesh_batch_axes(mesh) if mesh is not None else ()
     axis_name = (None if not batch_axes
                  else batch_axes[0] if len(batch_axes) == 1 else batch_axes)
@@ -154,6 +187,34 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
         # axis_name themselves (the legacy grad_sync-hook path)
         stats = statsbank.for_mesh(stats, mesh)
 
+    fsdp_axis = shd.fsdp_axis_entry(mesh) if mesh is not None else None
+    gather_f32 = pay_info = None
+    if param_sharding != "replicated":
+        if mesh is None or fsdp_axis is None:
+            raise ValueError(f"param_sharding={param_sharding!r} needs a "
+                             f"mesh whose axes carry the rule table's "
+                             f"'fsdp' logical axis")
+        if param_sharding == "fsdp_q":
+            if stats is None:
+                raise ValueError("param_sharding='fsdp_q' quantizes at "
+                                 "the owner with leaf-global bank stats — "
+                                 "pass stats=StatsConfig(...)")
+            if not policy.uses_payload_gemm:
+                raise ValueError("param_sharding='fsdp_q' streams payload "
+                                 "operands; the policy must route GEMMs "
+                                 "through qdot_train (s2fp8 mode with "
+                                 "gemm_mode='payload' or a pallas backend)")
+        fsdp_n = mesh.shape[fsdp_axis]
+        lead_axes = tuple(a for a in batch_axes if a != fsdp_axis)
+        # one FSDPInfo + ONE custom_vjp gather per step factory, so the
+        # custom_vjp identity (and the _qdot_banked cache key) is stable
+        # across retraces
+        base_info = collectives.FSDPInfo(
+            fsdp_axis, fsdp_n, lead_axes, grad_sync_mode,
+            grad_sync_min_size, grad_sync_backend)
+        gather_f32 = collectives.make_param_gather(base_info)
+        pay_info = base_info._replace(gather_f32=gather_f32)
+
     def _scale_loss(loss):
         # lambda-scaling (Eq. 6) and the DP mean-normalization both fold
         # INTO the differentiated function: per-shard grads come out as
@@ -165,15 +226,12 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             loss = loss / float(n_shards)
         return loss
 
-    def scaled_loss(params, batch):
-        loss, metrics = loss_fn(params, batch, policy)
-        return _scale_loss(loss), metrics
-
-    def _sync(grads):
+    def _sync(grads, skip=None):
         if axis_name is not None:
             return collectives.grad_sync_axis(
                 grads, axis_name, axis_sizes, mode=grad_sync_mode,
-                min_size=grad_sync_min_size, backend=grad_sync_backend)
+                min_size=grad_sync_min_size, backend=grad_sync_backend,
+                skip=skip)
         if grad_sync is not None:
             return grad_sync(grads)
         return grads
@@ -233,8 +291,31 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
 
         return _reduce_metrics
 
-    def _build_step(int_div: int = 1):
+    def _build_step(int_div: int = 1, elig=None, pay=None):
         reduce_metrics = _make_reduce_metrics(int_div)
+
+        def _gather_params(p):
+            # FSDP just-in-time gather, INSIDE the differentiated loss:
+            # eligible leaves enter as dim-0 shards and leave either
+            # through the f32 custom_vjp gather (grads reduce-scatter
+            # back in its backward) or wrapped as FSDPPayloadParam (the
+            # payload handoff Policy.dot/qdot_train consume — 1-byte
+            # all-gather, same sharded-grad contract).
+            if elig is None:
+                return p
+
+            def g(leaf, e, q):
+                if not e:
+                    return leaf
+                if q:
+                    return collectives.FSDPPayloadParam(leaf, pay_info)
+                return gather_f32(leaf)
+
+            return jax.tree_util.tree_map(g, p, elig, pay)
+
+        def scaled_loss(params, batch):
+            loss, metrics = loss_fn(_gather_params(params), batch, policy)
+            return _scale_loss(loss), metrics
 
         def _core(params, opt_state, stats_state, guard_state, batch, step):
             # the chaos schedule (if armed) rides the batch as int32
@@ -248,7 +329,8 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             else:
                 def banked_loss(p, bank):
                     with statsbank.bind(bank, step, stats):
-                        loss, metrics = loss_fn(p, batch, policy)
+                        loss, metrics = loss_fn(_gather_params(p), batch,
+                                                policy)
                     return _scale_loss(loss), metrics
 
                 (loss, metrics), (grads, bank_cot) = jax.value_and_grad(
@@ -258,7 +340,10 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             if scale != 1.0:
                 grads = jax.tree_util.tree_map(lambda g: g / scale, grads)
                 loss = loss / scale
-            grads = _sync(grads)
+            # FSDP leaves exit value_and_grad already reduce-scattered to
+            # the owner shard (the gather custom_vjp's backward) — the
+            # replicated sync skips them
+            grads = _sync(grads, skip=elig)
             metrics = reduce_metrics(metrics)
             loss = _global(loss)
             # in-trace fault injection points: data-driven `where`s on the
@@ -288,14 +373,23 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             lr = schedule(step)
             # the candidate update is computed UNconditionally (its clip
             # reductions stay outside lax.cond, matching the fp32
-            # baseline's count); the guard's cond below is a pure select
-            new_params, new_opt = optimizer.update(grads, opt_state,
-                                                   params, lr)
+            # baseline's count); the guard's cond below is a pure select.
+            # Under FSDP the update runs shard-local (ZeRO-3: opt state
+            # only for owned shards) inside the fsdp_grads scope, so the
+            # optimizer's clip — and the grad_norm metric below — psum
+            # sharded-leaf sum-of-squares over the fsdp axis.
+            norm_scope = (optim_mod.fsdp_grads(fsdp_axis, elig)
+                          if elig is not None else contextlib.nullcontext())
+            with norm_scope:
+                new_params, new_opt = optimizer.update(grads, opt_state,
+                                                       params, lr)
+                # grads are post-sync (replicated-global under a mesh, or
+                # owner shards under FSDP — the scope makes the norm
+                # global either way), so no axis_name is needed here.
+                grad_norm = global_norm(grads)
             out = dict(metrics)
             out["loss"] = loss
-            # grads are post-sync (replicated-global under a mesh), so the
-            # plain norm IS the global norm — no axis_name needed here.
-            out["grad_norm"] = global_norm(grads)
+            out["grad_norm"] = grad_norm
             out["lr"] = lr
             if track_stats:
                 probe = jax.tree_util.tree_leaves(grads)[-1]
@@ -361,8 +455,24 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
         # batch).
         batch = args[-2]
         int_div = 1 if shd.batch_is_sharded(batch, mesh) else n_shards
-        if int_div not in bodies:
-            step_fn = _build_step(int_div)
+        if param_sharding == "replicated":
+            elig = pay = None
+            key = int_div
+        else:
+            # eligibility resolves on the GLOBAL leaves out here — inside
+            # the shard_map body dim 0 is already divided and the
+            # predicate would be ambiguous.  The same predicate drives
+            # train_step_specs, so specs and gathers stay in lockstep.
+            elig = jax.tree_util.tree_map(
+                lambda p: shd.fsdp_leaf_eligible(p.shape, p.dtype, fsdp_n),
+                args[0])
+            pay = jax.tree_util.tree_map(
+                lambda p, e: bool(e and param_sharding == "fsdp_q"
+                                  and p.ndim == 2), args[0], elig)
+            key = (int_div, tuple(jax.tree_util.tree_leaves(elig)),
+                   tuple(jax.tree_util.tree_leaves(pay)))
+        if key not in bodies:
+            step_fn = _build_step(int_div, elig, pay)
 
             def local_body(*a, _step_fn=step_fn):
                 # inside shard_map every tensor is a local shard and the
@@ -372,11 +482,12 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                 with shd.suspend_rules():
                     return _step_fn(*a)
 
-            bodies[int_div] = local_body
+            bodies[key] = local_body
         in_specs, out_specs = shd.train_step_specs(
             batch, mesh, with_stats=stats is not None,
-            with_guard=guard is not None)
-        out = shard_map(bodies[int_div], mesh=mesh, in_specs=in_specs,
+            with_guard=guard is not None, param_sharding=param_sharding,
+            params=args[0], opt_state=args[1])
+        out = shard_map(bodies[key], mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs, check_rep=False)(*args)
         if stats is not None:
             _drain_telemetry(out[2], args[-1])

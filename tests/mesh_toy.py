@@ -65,11 +65,15 @@ def loss_fn(params, batch, pol):
     return jnp.mean(jnp.sum(y * batch["t"], axis=-1)), {}
 
 
-def setup(mesh=None, grad_sync_mode="f32", telemetry=False, guard=None):
+def setup(mesh=None, grad_sync_mode="f32", telemetry=False, guard=None,
+          param_sharding="replicated"):
     """(step_fn, params, opt_state, bank, stats_cfg) for the toy.
     ``guard``: a ``training/guard.GuardConfig`` — the returned step then
     takes/returns the extra guard carry (build it with
-    ``guard.init_state()``)."""
+    ``guard.init_state()``).  ``param_sharding``: trainer FSDP modes —
+    ``w`` is [8, 16] f32, so it is gather-eligible on any fsdp axis
+    dividing 8 and payload-eligible under ``fsdp_q`` (its only consumer
+    is the ``Policy.dot`` GEMM B slot)."""
     from repro.core import statsbank
     from repro.core.policy import make_policy
     from repro.optim import optimizers, schedules
@@ -83,7 +87,8 @@ def setup(mesh=None, grad_sync_mode="f32", telemetry=False, guard=None):
     bank = statsbank.init_bank(loss_fn, params, make_batch(0), pol, cfg)
     step_fn = make_train_step(loss_fn, opt, schedules.constant(LR), pol,
                               stats=cfg, mesh=mesh,
-                              grad_sync_mode=grad_sync_mode, guard=guard)
+                              grad_sync_mode=grad_sync_mode, guard=guard,
+                              param_sharding=param_sharding)
     return jax.jit(step_fn), params, opt.init(params), bank, cfg
 
 

@@ -1,0 +1,98 @@
+"""launch/memplan.py: pin the per-leaf FSDP residency byte math."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import memplan
+from repro.parallel import sharding as shd
+
+
+def test_plan_leaf_byte_math():
+    # [8, 16] f32, 8-way: 128 elements, 512 bytes full
+    full = memplan.plan_leaf((8, 16), jnp.float32, 8, "replicated")
+    assert (full.store_bytes, full.gather_bytes) == (512, 0)
+    assert not full.sharded and not full.payload
+
+    f = memplan.plan_leaf((8, 16), jnp.float32, 8, "fsdp")
+    assert (f.store_bytes, f.gather_bytes) == (64, 512)   # /8 store, f32 wire
+    assert f.sharded and not f.payload
+
+    q = memplan.plan_leaf((8, 16), jnp.float32, 8, "fsdp_q")
+    assert q.store_bytes == 64
+    assert q.gather_bytes == 128 + memplan.PAYLOAD_STATS_BYTES  # 1 B/elt
+    assert q.sharded and q.payload
+
+    # rank-1 leaf: sharded but NOT payload (GEMM B slots are rank 2) —
+    # fsdp_q still gathers it f32
+    v = memplan.plan_leaf((64,), jnp.float32, 8, "fsdp_q")
+    assert (v.store_bytes, v.gather_bytes) == (32, 256)
+    assert v.sharded and not v.payload
+
+    # ineligible: ragged dim 0, int dtype, scalar — full store, no gather
+    for shape, dtype in [((6, 4), jnp.float32), ((8, 16), jnp.int32),
+                         ((), jnp.float32)]:
+        lp = memplan.plan_leaf(shape, dtype, 8, "fsdp_q")
+        n = 1
+        for d in shape:
+            n *= d
+        assert lp.store_bytes == n * memplan._itemsize(jnp.dtype(dtype))
+        assert lp.gather_bytes == 0 and not lp.sharded
+
+    # a 1-way axis never shards
+    one = memplan.plan_leaf((8, 16), jnp.float32, 1, "fsdp_q")
+    assert (one.store_bytes, one.gather_bytes) == (512, 0)
+
+
+def test_eligibility_matches_trainer_rule():
+    """memplan's jax-free predicate must agree with the trainer's
+    (parallel/sharding.fsdp_leaf_eligible) everywhere — the fits verdict
+    is only honest if both apply the same rule."""
+    cases = [((8, 16), jnp.float32), ((8, 16), jnp.bfloat16),
+             ((6, 4), jnp.float32), ((8, 16), jnp.int32),
+             ((), jnp.float32), ((64,), jnp.float32),
+             ((12, 4, 4), jnp.float32), ((0, 4), jnp.float32)]
+    for n in (1, 4, 8):
+        for shape, dtype in cases:
+            assert memplan.leaf_eligible(shape, jnp.dtype(dtype), n) \
+                == shd.fsdp_leaf_eligible(shape, dtype, n), (shape, dtype, n)
+
+
+def test_plan_state_aggregates_and_opt_never_gathers():
+    params = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+              "b": jax.ShapeDtypeStruct((6,), jnp.float32)}
+    opt = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+           "m": params, "v": params}
+    plan = memplan.plan_state(params, opt, 8, "fsdp_q")
+    # params: w sharded 512/8=64, b replicated 24
+    assert plan["param_store_bytes"] == 64 + 24
+    # opt: two sharded moment mirrors of w + two b's + the 4-byte step
+    assert plan["opt_store_bytes"] == 2 * (64 + 24) + 4
+    assert plan["steady_bytes"] == plan["param_store_bytes"] \
+        + plan["opt_store_bytes"]
+    # only w gathers, as a payload: 128 B + stats
+    assert plan["gather_peak_bytes"] == 128 + memplan.PAYLOAD_STATS_BYTES
+    assert plan["gather_sum_bytes"] == plan["gather_peak_bytes"]
+    assert plan["peak_bytes"] == plan["steady_bytes"] \
+        + plan["gather_peak_bytes"]
+    assert plan["n_payload"] == 1 and plan["n_sharded"] == 1
+
+    rep = memplan.plan_state(params, opt, 8, "replicated")
+    # the ~n_shards store drop the bench lane asserts, in miniature:
+    # w's 12 bytes/elt drop 8x, b's stay
+    assert rep["steady_bytes"] == 3 * (512 + 24) + 4
+    assert rep["gather_peak_bytes"] == 0
+
+
+def test_fsdp_shards_of_and_mode_validation():
+    assert memplan.fsdp_shards_of({"data": 16, "model": 16}) == 16
+    assert memplan.fsdp_shards_of({"pod": 2, "data": 16, "model": 16}) == 16
+    assert memplan.fsdp_shards_of({"model": 4}) == 1
+    with pytest.raises(ValueError, match="mode"):
+        memplan.plan_leaf((8,), jnp.float32, 8, "zero3")
+
+
+def test_format_report_smoke():
+    out = memplan.format_report(["transformer_tiny"],
+                                {"data": 16, "model": 16})
+    assert "transformer_tiny" in out and "fsdp_q" in out
+    assert out.count("\n") >= 4          # header + 3 mode rows
