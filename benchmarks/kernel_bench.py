@@ -715,6 +715,118 @@ def bench_conv(results, smoke=False):
     results["conv"].append(lane)
 
 
+def modeled_hbm_bytes_serving_decode(n_layers: int, kv_heads: int,
+                                     head_dim: int, context: int,
+                                     max_len: int, block: int) -> dict:
+    """Modeled decode-attention HBM bytes **per generated token per slot**.
+
+    A decode step reads the slot's whole KV history once.  The dense fp32
+    engine streams the full ``[max_len]`` buffer (its validity mask is
+    applied after the read, so padding is paid for); the paged payload
+    engine reads only the slot's allocated blocks (ceil(context / block)
+    blocks) at 1 byte/element plus the frozen per-layer (alpha, beta)
+    scalars.  The >= 4x gap (4 B -> 1 B, minus block-rounding slack) is
+    the serving-side version of the paper's activation-memory argument.
+    """
+    per_tok = 2 * n_layers * kv_heads * head_dim          # K+V elements
+    dense = per_tok * max_len * 4
+    nblk = -(-context // block)
+    paged = per_tok * nblk * block * 1 + 2 * n_layers * 2 * 4  # + stats
+    return {"f32_dense": dense, "payload_paged": paged,
+            "ratio": dense / paged}
+
+
+def modeled_serving_capacity(slots_list=(8, 64, 256), *, n_layers=32,
+                             kv_heads=8, head_dim=128, max_len=2048,
+                             hbm_gb=16.0) -> dict:
+    """Modeled KV-cache residency for a 7B-class GQA config vs one
+    accelerator's HBM: at which slot count does an fp32 dense cache stop
+    fitting while the paged payload pool keeps admitting?"""
+    out = {}
+    per_slot = 2 * n_layers * kv_heads * head_dim * max_len
+    for slots in slots_list:
+        dense = slots * per_slot * 4
+        paged = slots * per_slot * 1 + n_layers * 4 * 4 \
+            + slots * (max_len // 16) * 4                  # stats + table
+        out[str(slots)] = {
+            "f32_dense_gb": dense / 1e9,
+            "payload_paged_gb": paged / 1e9,
+            "f32_fits": dense <= hbm_gb * 1e9,
+            "payload_fits": paged <= hbm_gb * 1e9,
+        }
+    return out
+
+
+def bench_serving(results, smoke=False):
+    """Serving lane (ISSUE 10): measured tok/s of the dense fp32 engine vs
+    the paged-payload engine on a tiny LM, plus the modeled decode HBM
+    bytes/token and the modeled slots-vs-HBM capacity frontier."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.core.policy import make_policy
+    from repro.models import transformer as tlm
+    from repro.serving import bank as sbank
+    from repro.serving.engine import LMServer, PayloadLMServer, Request
+
+    cfg = get_reduced_config("minicpm_2b").replace(n_layers=2, remat=False)
+    params = tlm.init_lm(cfg, jax.random.PRNGKey(0))
+    n_req, new_tok = (3, 3) if smoke else (12, 16)
+    slots, max_len = (2, 32) if smoke else (4, 128)
+    pol = make_policy("s2fp8", backend="ref", gemm_mode="payload")
+    bank = sbank.export_serving_bank(params, cfg, pol, prompt_len=8,
+                                     batch=2, passes=1)
+
+    def run_engine(server):
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab, 5 + 4 * (i % 2),
+                                            dtype=np.int32),
+                        max_new_tokens=new_tok) for i in range(n_req)]
+        for r in reqs:
+            server.submit(r)
+        server.run_to_completion(max_ticks=50)     # warm compiles
+        rng = np.random.default_rng(1)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab, 5 + 4 * (i % 2),
+                                            dtype=np.int32),
+                        max_new_tokens=new_tok) for i in range(n_req)]
+        for r in reqs:
+            server.submit(r)
+        t0 = _time.perf_counter()
+        server.run_to_completion(max_ticks=200)
+        dt = _time.perf_counter() - t0
+        toks = sum(len(r.out) for r in reqs)
+        assert toks == n_req * new_tok
+        return toks / dt, len(server.prefill_shapes)
+
+    dense_tok_s, dense_shapes = run_engine(
+        LMServer(cfg, params, make_policy("fp32"), slots=slots,
+                 max_len=max_len))
+    payload_tok_s, payload_shapes = run_engine(
+        PayloadLMServer(cfg, params, pol, bank=bank, slots=slots,
+                        max_len=max_len, block=8, cache_fmt="e5m2"))
+
+    lane = {
+        "slots": slots, "max_len": max_len, "requests": n_req,
+        "new_tokens": new_tok,
+        "dense_f32_tok_s": dense_tok_s,
+        "payload_paged_tok_s": payload_tok_s,
+        "dense_prefill_shapes": dense_shapes,
+        "payload_prefill_shapes": payload_shapes,
+        "modeled_decode_bytes_per_token": modeled_hbm_bytes_serving_decode(
+            32, 8, 128, context=2048, max_len=2048, block=16),
+        "modeled_capacity_16gb": modeled_serving_capacity(),
+    }
+    emit("serving_dense_f32_tok_s", 1e6 / max(dense_tok_s, 1e-9),
+         f"{dense_tok_s:.1f} tok/s dense fp32 engine")
+    emit("serving_payload_paged_tok_s", 1e6 / max(payload_tok_s, 1e-9),
+         f"{payload_tok_s:.1f} tok/s paged payload engine "
+         f"(modeled {lane['modeled_decode_bytes_per_token']['ratio']:.2f}x "
+         f"fewer decode HBM bytes/token)")
+    results["serving"].append(lane)
+
+
 def provenance() -> dict:
     """Run provenance, recorded once at the top level and stamped on every
     lane row: a BENCH_kernels.json number is only comparable to another
@@ -744,7 +856,7 @@ def main(smoke: bool = False):
                "provenance": prov,
                "truncate": [], "quantize": [], "matmul": [], "stats": [],
                "gemm": [], "moe": [], "conv": [], "dp": [], "fsdp": [],
-               "attn": []}
+               "attn": [], "serving": []}
     key = jax.random.PRNGKey(0)
 
     if smoke:
@@ -759,13 +871,14 @@ def main(smoke: bool = False):
         bench_dp(results, smoke=True)
         bench_fsdp(results, smoke=True)
         bench_attn(results, sizes=(256,), smoke=True)
+        bench_serving(results, smoke=True)
         _stamp_provenance(results, prov)
         # falsifiable structure checks: every expected lane must have been
         # emitted with finite timings (a lane that silently skipped its
         # work, or a refactor that dropped one, fails the build here)
         assert all(len(results[k]) == 1
                    for k in ("gemm", "moe", "conv", "stats", "dp", "fsdp",
-                             "attn")), \
+                             "attn", "serving")), \
             {k: len(v) for k, v in results.items() if isinstance(v, list)}
         assert all("provenance" in row for k, v in results.items()
                    if isinstance(v, list) for row in v), "unstamped lane row"
@@ -814,6 +927,19 @@ def main(smoke: bool = False):
         e2 = modeled_hbm_bytes_attn("einsum_payload", 8192, 64)
         assert e2["total_bytes"] / e1["total_bytes"] > 3.0, (e1, e2)
         assert at["residual_cut_vs_fig4_flash"] >= 3.5, at
+        # serving lane (ISSUE 10): both engines produced tokens; the paged
+        # payload cache moves >= 3.5x fewer modeled decode HBM bytes/token
+        # than the dense fp32 cache, and on the modeled 16 GB capacity
+        # frontier there is a slot count where fp32 has stopped fitting
+        # while the payload pool still admits
+        sv = results["serving"][0]
+        for want in ("dense_f32_tok_s", "payload_paged_tok_s"):
+            assert _math.isfinite(sv[want]) and sv[want] > 0, (want, sv)
+        assert sv["modeled_decode_bytes_per_token"]["ratio"] >= 3.5, sv
+        cap = sv["modeled_capacity_16gb"]
+        assert any(not c["f32_fits"] and c["payload_fits"]
+                   for c in cap.values()), cap
+        assert sv["payload_prefill_shapes"] <= 8, sv
         print("# smoke ok (no JSON written)")
         return
 
@@ -825,6 +951,7 @@ def main(smoke: bool = False):
     bench_dp(results)
     bench_fsdp(results)
     bench_attn(results)
+    bench_serving(results)
 
     for n in [1 << 16, 1 << 20, 1 << 22]:
         x = jax.random.normal(key, (n,)) * 1e-5

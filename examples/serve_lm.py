@@ -1,4 +1,4 @@
-"""End-to-end serving demo: batched requests through the slot engine.
+"""End-to-end serving demo: dense engine, then the paged-payload engine.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,22 +10,44 @@ import numpy as np
 from repro.configs import get_reduced_config
 from repro.core.policy import make_policy
 from repro.launch import api
-from repro.serving.engine import LMServer, Request
+from repro.serving import bank as sbank
+from repro.serving.engine import LMServer, PayloadLMServer, Request
 
+
+def run(server, reqs, label):
+    for r in reqs:
+        server.submit(r)
+    t0 = time.perf_counter()
+    ticks = server.run_to_completion()
+    dt = time.perf_counter() - t0
+    tok = sum(len(r.out) for r in reqs)
+    print(f"[{label}] served {len(reqs)} requests / {tok} tokens in "
+          f"{ticks} ticks, {dt:.2f}s ({tok/dt:.1f} tok/s)")
+    for i, r in enumerate(reqs[:2]):
+        print(f"  req{i}: {list(r.prompt[:4])}... -> {r.out}")
+
+
+def make_reqs(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab, 12, dtype=np.int32),
+                    max_new_tokens=12) for _ in range(n)]
+
+
+# Dense engine: handles any block pattern (gemma's sliding-window mix).
 cfg = get_reduced_config("gemma3_1b").replace(remat=False)
 params = api.init_params(cfg, jax.random.PRNGKey(0))
 server = LMServer(cfg, params, make_policy("s2fp8"), slots=4, max_len=96)
+run(server, make_reqs(cfg, 10), "dense/gemma3_1b")
 
-rng = np.random.default_rng(0)
-reqs = [Request(prompt=rng.integers(0, cfg.vocab, 12, dtype=np.int32),
-                max_new_tokens=12) for _ in range(10)]
-for r in reqs:
-    server.submit(r)
-t0 = time.perf_counter()
-ticks = server.run_to_completion()
-dt = time.perf_counter() - t0
-tok = sum(len(r.out) for r in reqs)
-print(f"served {len(reqs)} requests / {tok} tokens in {ticks} ticks, "
-      f"{dt:.2f}s ({tok/dt:.1f} tok/s, sliding-window + global attention mix)")
-for i, r in enumerate(reqs[:3]):
-    print(f"req{i}: {list(r.prompt[:4])}... -> {r.out}")
+# Payload engine: global attention only; KV stored as S2FP8 payload blocks
+# with (alpha, beta) frozen at export — decode runs zero stats reductions.
+cfg = get_reduced_config("minicpm_2b").replace(n_layers=2, remat=False)
+pol = make_policy("s2fp8", gemm_mode="payload")
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+bank = sbank.export_serving_bank(params, cfg, pol, prompt_len=12, passes=1)
+server = PayloadLMServer(cfg, params, pol, bank=bank, slots=4, max_len=96,
+                         block=16, cache_fmt="e5m2")
+pool_b, stats_b = server.cache_bytes()
+print(f"[payload] paged cache: {pool_b/1e6:.2f} MB pool (1 B/elt) + "
+      f"{stats_b} B frozen stats")
+run(server, make_reqs(cfg, 10, seed=1), "payload/minicpm_2b")

@@ -217,6 +217,32 @@ def _qdot_banked(backend: Optional[str], fmt: str, cfg: statsbank.StatsConfig,
 
 
 @functools.lru_cache(maxsize=None)
+def _qdot_frozen(backend: Optional[str], fmt: str,
+                 plan: Optional[QdotPlan] = None):
+    """Frozen-stats serving variant (forward-only, no VJP): operands
+    quantize with (alpha, beta) re-derived from the exported bank entry's
+    carried moments (:func:`statsbank.frozen_stats` — pure scalar
+    arithmetic), and the output truncates through the fused Eq. 5
+    epilogue with the out site's frozen stats.  ZERO stats reductions by
+    construction — no ``maybe_refresh``, no ``lax.cond`` — which is the
+    serving invariant the engine tests assert by jaxpr inspection."""
+    layout, _, _ = _gemm_structure(plan)
+
+    def qdot(a, b, entry):
+        be = nbackend.get_backend(backend)
+        qa = be.quantize(a, stats=statsbank.frozen_stats(entry["a.fwd"], fmt),
+                         fmt=fmt)
+        qb = be.quantize(b, stats=statsbank.frozen_stats(entry["b.fwd"], fmt),
+                         fmt=fmt)
+        return _qmm(be, qa, qb, layout,
+                    epilogue_stats=statsbank.frozen_stats(entry["out.fwd"],
+                                                          fmt),
+                    fmt=fmt)
+
+    return qdot
+
+
+@functools.lru_cache(maxsize=None)
 def _qdot_exact(backend: Optional[str], fmt: str,
                 plan: Optional[QdotPlan] = None):
     """Sessionless variant: fresh exact stats per call (one reduction per
@@ -330,6 +356,14 @@ def qdot_train(a: jnp.ndarray, b: jnp.ndarray, *,
         # match every later step instead of a raw untruncated f32 dot
         sess.qdot_site()
         y2 = _qdot_exact(backend, fmt, plan)(a2, b2)
+    elif sess.frozen:
+        # serving: frozen export-time stats, forward-only, zero reductions
+        if fsdp is not None:
+            raise ValueError("FSDP payload operands are a training-path "
+                             "feature; frozen serving sessions see "
+                             "replicated params")
+        entry = sess.qdot_site()
+        y2 = _qdot_frozen(backend, fmt, plan)(a2, b2, entry)
     else:
         entry = sess.qdot_site()
         y2 = _qdot_banked(backend, fmt, sess.cfg, plan, fsdp)(
@@ -507,6 +541,31 @@ def _qflash_banked(backend: Optional[str], fmt: str,
 
 
 @functools.lru_cache(maxsize=None)
+def _qflash_frozen(backend: Optional[str], fmt: str, causal: bool,
+                   window: Optional[int], bq: int, bk: int):
+    """Frozen-stats serving flash attention (forward-only, mirrors
+    ``_qdot_frozen``): Q/K/V quantize with the exported bank node's frozen
+    stats, the fused kernel truncates the output tile with the frozen out
+    stats — zero stats reductions (the softmax's own rowwise max/sum are
+    algorithmic, present in the fp32 baseline too)."""
+
+    def qflash(q, k, v, entry):
+        be = nbackend.get_backend(backend)
+        qq = be.quantize(q, stats=statsbank.frozen_stats(entry["q.fwd"], fmt),
+                         fmt=fmt)
+        qk = be.quantize(k, stats=statsbank.frozen_stats(entry["k.fwd"], fmt),
+                         fmt=fmt)
+        qv = be.quantize(v, stats=statsbank.frozen_stats(entry["v.fwd"], fmt),
+                         fmt=fmt)
+        out, _ = _payload_flash_fwd(
+            be, qq, qk, qv, causal, window, fmt, bq, bk,
+            statsbank.frozen_stats(entry["out.fwd"], fmt))
+        return out
+
+    return qflash
+
+
+@functools.lru_cache(maxsize=None)
 def _qflash_exact(backend: Optional[str], fmt: str, causal: bool,
                   window: Optional[int], bq: int, bk: int):
     """Sessionless variant: fresh exact stats per call, payload-domain
@@ -582,6 +641,11 @@ def qflash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         sess.qflash_site()
         return _qflash_exact(backend, fmt, causal, window,
                              q_chunk, kv_chunk)(q, k, v)
+    if sess.frozen:
+        # serving: frozen export-time stats, forward-only, zero reductions
+        entry = sess.qflash_site()
+        return _qflash_frozen(backend, fmt, causal, window,
+                              q_chunk, kv_chunk)(q, k, v, entry)
     entry = sess.qflash_site()
     return _qflash_banked(backend, fmt, sess.cfg, causal, window,
                           q_chunk, kv_chunk)(q, k, v, entry,

@@ -253,9 +253,33 @@ def current_session() -> Optional["Session"]:
     return getattr(_ACTIVE, "session", None)
 
 
+def frozen_stats(state: Dict[str, jnp.ndarray], fmt: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(alpha, beta) re-derived from a site state's carried raw
+    (ema_mu, ema_m) moments for ``fmt``'s target range, gradient-stopped.
+
+    The single derivation shared by :meth:`Session.operand_stats`, the
+    frozen serving session, and the serving KV-cache stats extraction —
+    sharing it is what makes the serving engines' scalars bit-identical
+    to the bank's.  The moments are format-agnostic, so a bank warmed
+    under one format serves the other correctly (for the warming format
+    the derivation reproduces the stored (alpha, beta) exactly).
+    Never-refreshed sites (``last < 0``) fall through to identity stats
+    via the empty-tensor convention of ``stats_from_reduction``."""
+    alpha, beta = s2fp8.stats_from_reduction(
+        state["ema_mu"], state["ema_m"],
+        (state["last"] >= 0).astype(jnp.float32),
+        s2fp8.FMT_TARGET_MAX[fmt])
+    return jax.lax.stop_gradient(alpha), jax.lax.stop_gradient(beta)
+
+
 class Session:
     """Trace-scoped view of a bank: resolves site keys, serves entries,
     and (in discovery mode) records the sites a model visits."""
+
+    # Frozen (export-time) sessions override this; core/qdot.py branches
+    # on it to pick the forward-only frozen-stats execution.
+    frozen = False
 
     def __init__(self, bank: Optional[Dict[str, Any]], step,
                  cfg: StatsConfig, discovery: bool = False):
@@ -431,13 +455,38 @@ class Session:
             self.recorded[key] = {"segment": self._segment[0] if self._segment
                                   else None, "dirs": ("fwd",)}
             return jnp.float32(1.0), jnp.float32(0.0)
-        st = self._lookup(key)["fwd"]
-        alpha, beta = s2fp8.stats_from_reduction(
-            st["ema_mu"], st["ema_m"],
-            (st["last"] >= 0).astype(jnp.float32),
-            s2fp8.FMT_TARGET_MAX[fmt])
-        return (jax.lax.stop_gradient(alpha),
-                jax.lax.stop_gradient(beta))
+        return frozen_stats(self._lookup(key)["fwd"], fmt)
+
+
+class FrozenSession(Session):
+    """Read-only serving session over an exported bank: every site serves
+    (alpha, beta) re-derived from its carried raw moments
+    (:func:`frozen_stats`) and NOTHING refreshes — no ``lax.cond``, no
+    stats reduction, no custom_vjp.  This is the inference contract of the
+    paper's delayed-stats idiom: a trained bank's statistics are frozen at
+    export and prefill/decode run pure elementwise quantization around the
+    payload kernels (the zero-reduction property the serving tests assert
+    by jaxpr inspection).
+
+    ``core/qdot.py`` dispatches on ``session.frozen`` to forward-only
+    frozen-stats GEMM/flash execution; :meth:`truncate` here is the
+    forward-only analogue of the banked truncation site."""
+
+    frozen = True
+
+    def __init__(self, bank: Dict[str, Any], cfg: StatsConfig = StatsConfig()):
+        super().__init__(bank, 0, cfg)
+        # never consumed on the frozen paths; zeroed so any accidental
+        # maybe_refresh ride-along would still deselect the reduction
+        self.pred_f = jnp.float32(0.0)
+        self.step_f = jnp.float32(0.0)
+
+    def truncate(self, x: jnp.ndarray, *, fmt: str = "e5m2",
+                 backend: Optional[str] = None) -> jnp.ndarray:
+        entry = self._lookup(self._site_key("t"))
+        alpha, beta = frozen_stats(entry["fwd"], fmt)
+        return nbackend.get_backend(backend).truncate(
+            x, stats=(alpha, beta), fmt=fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -452,6 +501,23 @@ def bind(bank: Dict[str, Any], step, cfg: StatsConfig = StatsConfig()):
     if current_session() is not None:
         raise RuntimeError("a StatsBank session is already active")
     sess = Session(bank, step, cfg)
+    _ACTIVE.session = sess
+    try:
+        yield sess
+    finally:
+        _ACTIVE.session = None
+
+
+@contextlib.contextmanager
+def freeze(bank: Dict[str, Any], cfg: StatsConfig = StatsConfig()):
+    """Activate a :class:`FrozenSession` over an exported bank for the
+    current trace — the serving engines' entry point.  Unlike :func:`bind`
+    the bank is NOT a differentiated argument: nothing flows back.  Use
+    inside the jitted prefill/decode function so the bank entries fold
+    into the compiled program as constants."""
+    if current_session() is not None:
+        raise RuntimeError("a StatsBank session is already active")
+    sess = FrozenSession(bank, cfg)
     _ACTIVE.session = sess
     try:
         yield sess

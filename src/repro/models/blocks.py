@@ -76,11 +76,16 @@ def activate(h_gate, h_lin, activation: str):
 
 
 def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: [..., S, hd]; positions: [S] int32."""
+    """x: [..., S, hd]; positions: [S] int32, or [B, S] for per-slot decode
+    (serving slots sit at different depths, so each batch row rotates by its
+    own position)."""
     hd = x.shape[-1]
     half = hd // 2
     freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]     # [S, half]
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs        # [..., S, half]
+    if positions.ndim == 2:
+        # [B, S, half] -> [B, 1..., S, half]: broadcast over head axes of x
+        ang = ang.reshape(ang.shape[:1] + (1,) * (x.ndim - 3) + ang.shape[1:])
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = x[..., :half], x[..., half:]
     y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
@@ -201,13 +206,16 @@ def decode_attention(q, k_cache, v_cache, valid, *, policy: Policy = None):
     """One-token attention vs. a cache.  q: [B,KV,G,1,d]; caches [B,KV,Smax,d].
 
     ``valid``: bool [Smax] mask of live cache slots (computed by the caller —
-    linear fill for full caches, ring occupancy for sliding-window caches).
+    linear fill for full caches, ring occupancy for sliding-window caches),
+    or [B, Smax] when batch rows sit at different positions (serving).
     The KV-cache seq axis may be sharded ("kv_seq") — the contraction +
     softmax reductions then lower to partial-softmax collectives under GSPMD.
     """
     d = q.shape[-1]
     logits = _attn_einsum(policy, "bkgqd,bksd->bkgqs", q, k_cache) / math.sqrt(d)
-    logits = jnp.where(valid[None, None, None, None], logits, _MASK)
+    vmask = (valid[:, None, None, None, :] if valid.ndim == 2
+             else valid[None, None, None, None, :])
+    logits = jnp.where(vmask, logits, _MASK)
     probs = jax.nn.softmax(logits, axis=-1)
     out = _attn_einsum(policy, "bkgqs,bksd->bkgqd", probs, v_cache)
     return out.astype(q.dtype)
@@ -393,7 +401,8 @@ def init_attn_block(cfg: ArchConfig, key, block_type: str) -> Dict[str, Any]:
 
 
 def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
-                     cache, cache_index, mode: str, block_type: str):
+                     cache, cache_index, mode: str, block_type: str,
+                     cache_fmt: Optional[str] = None):
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
     h, kvh = cfg.n_heads, cfg.kv_heads
@@ -414,22 +423,58 @@ def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
     qg = _grouped(q, kvh)
 
     new_cache = cache
-    if mode == "decode":
+    if mode == "decode" and cache is not None and "kp" in cache:
+        # Paged payload cache (serving): per-slot block-table write of the
+        # new K/V token plus gather-dequant attention over the slot's
+        # blocks.  Stats are frozen (alpha, beta) leaves carried in the
+        # cache itself, so this path runs zero stats reductions.
+        from repro.serving import paged_cache as _paged
+        assert s == 1
+        attn, new_cache = _paged.update_and_attend(
+            qg, k, v, cache, cache_index, policy=pol, cache_fmt=cache_fmt)
+    elif mode == "decode":
         assert s == 1 and cache is not None
         smax = cache["k"].shape[2]
         kpos = jnp.arange(smax)
-        if window and smax <= window:
-            # ring buffer: overwrite the oldest slot; all live slots are
-            # within the window by construction.
-            slot = jax.lax.rem(cache_index, smax)
-            valid = kpos < jnp.minimum(cache_index + 1, smax)
+        ci = jnp.asarray(cache_index)
+        k_store, v_store = k, v
+        if statsbank.current_session() is not None:
+            # KV-cache range site: the stored copy is truncated at the
+            # per-layer kv_cache/t{0,1} sites so export probes learn the
+            # cache's (alpha, beta); frozen serving then stores exactly the
+            # values the payload cache would round-trip.
+            with statsbank.scope("kv_cache"):
+                k_store = pol.truncate(k)
+                v_store = pol.truncate(v)
+        if ci.ndim == 1:
+            # per-slot positions (serving): each batch row writes and masks
+            # at its own depth instead of one shared scalar index
+            bi = jnp.arange(b)
+            if window and smax <= window:
+                slot = jax.lax.rem(ci, smax)
+                valid = kpos[None, :] < jnp.minimum(ci + 1, smax)[:, None]
+            else:
+                slot = ci
+                valid = kpos[None, :] <= ci[:, None]
+                if window:
+                    valid &= kpos[None, :] > ci[:, None] - window
+            k_cache = cache["k"].at[bi, :, slot].set(
+                k_store[:, :, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bi, :, slot].set(
+                v_store[:, :, 0].astype(cache["v"].dtype))
         else:
-            slot = cache_index
-            valid = kpos <= cache_index
-            if window:
-                valid &= kpos > cache_index - window
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+            if window and smax <= window:
+                # ring buffer: overwrite the oldest slot; all live slots are
+                # within the window by construction.
+                slot = jax.lax.rem(ci, smax)
+                valid = kpos < jnp.minimum(ci + 1, smax)
+            else:
+                slot = ci
+                valid = kpos <= ci
+                if window:
+                    valid &= kpos > ci - window
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_store.astype(cache["k"].dtype), slot, axis=2)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_store.astype(cache["v"].dtype), slot, axis=2)
         k_cache = shard(k_cache, "batch", "kv", "kv_seq", None)
         v_cache = shard(v_cache, "batch", "kv", "kv_seq", None)
         attn = decode_attention(qg, k_cache, v_cache, valid, policy=pol)
@@ -454,17 +499,26 @@ def attn_block_apply(p, x, cfg: ArchConfig, pol: Policy, positions,
         else:
             attn = full_attention(qg, k, v, causal=causal, window=window, policy=pol)
         if mode == "prefill" and cache is not None:
+            k_store, v_store = k, v
+            if statsbank.current_session() is not None:
+                # same kv_cache/t{0,1} sites as the decode write path: the
+                # cache holds the truncated (grid-snapped) values, so a
+                # payload re-encode of it is lossless (dequant∘quant ≡
+                # truncate; see core/s2fp8.py)
+                with statsbank.scope("kv_cache"):
+                    k_store = pol.truncate(k)
+                    v_store = pol.truncate(v)
             smax = cache["k"].shape[2]
             kc = jnp.zeros_like(cache["k"])
             vc = jnp.zeros_like(cache["v"])
             if window:
                 # window cache: keep only the last `smax_local` positions
                 keep = min(smax, s)
-                kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, :, s - keep:].astype(kc.dtype), 0, axis=2)
-                vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, :, s - keep:].astype(vc.dtype), 0, axis=2)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k_store[:, :, s - keep:].astype(kc.dtype), 0, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v_store[:, :, s - keep:].astype(vc.dtype), 0, axis=2)
             else:
-                kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, axis=2)
-                vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, axis=2)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k_store.astype(kc.dtype), 0, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v_store.astype(vc.dtype), 0, axis=2)
             new_cache = {"k": shard(kc, "batch", "kv", "kv_seq", None),
                          "v": shard(vc, "batch", "kv", "kv_seq", None)}
 
@@ -760,10 +814,11 @@ def init_block(block_type: str, cfg: ArchConfig, key):
 
 
 def block_apply(block_type: str, params, x, cfg: ArchConfig, pol: Policy,
-                positions, cache=None, cache_index=0, mode: str = "train"):
+                positions, cache=None, cache_index=0, mode: str = "train",
+                cache_fmt: Optional[str] = None):
     if block_type in ("dense", "local", "moe", "attn", "dense_first", "encoder"):
         return attn_block_apply(params, x, cfg, pol, positions, cache,
-                                cache_index, mode, block_type)
+                                cache_index, mode, block_type, cache_fmt)
     if block_type == "mamba1":
         return mamba1_apply(params, x, cfg, pol, cache, mode)
     if block_type == "mamba2":

@@ -78,7 +78,8 @@ def lm_head(params, x, cfg: ArchConfig, pol: Policy):
 
 
 def _segment_scan(btype, seg_params, x, cfg, pol, positions, caches,
-                  cache_index, mode, seg_name: str = "seg"):
+                  cache_index, mode, seg_name: str = "seg",
+                  cache_fmt: Optional[str] = None):
     """Scan one homogeneous segment.  caches: stacked per-layer pytree or None.
 
     When a StatsBank session is active (jitted train step with delayed
@@ -97,13 +98,13 @@ def _segment_scan(btype, seg_params, x, cfg, pol, positions, caches,
             with statsbank.segment_ctx(seg_name, layer_sites):
                 y, _, aux = blocks.block_apply(btype, layer_p, x, cfg, pol,
                                                positions, None, cache_index,
-                                               mode)
+                                               mode, cache_fmt)
             return (y, aux_sum + aux), None
         layer_p, layer_sites, layer_c = xs
         with statsbank.segment_ctx(seg_name, layer_sites):
             y, c_new, aux = blocks.block_apply(btype, layer_p, x, cfg, pol,
                                                positions, layer_c,
-                                               cache_index, mode)
+                                               cache_index, mode, cache_fmt)
         return (y, aux_sum + aux), c_new
 
     if cfg.remat and mode == "train":
@@ -115,12 +116,23 @@ def _segment_scan(btype, seg_params, x, cfg, pol, positions, caches,
 
 
 def forward(params, tokens, cfg: ArchConfig, pol: Policy, *,
-            caches=None, cache_index=0, mode: str = "train"):
-    """Shared forward.  Returns (hidden, total_aux, new_caches)."""
+            caches=None, cache_index=0, mode: str = "train",
+            cache_fmt: Optional[str] = None):
+    """Shared forward.  Returns (hidden, total_aux, new_caches).
+
+    ``cache_index`` may be a traced scalar (single shared position) or a
+    [B] vector of per-slot positions (serving); ``cache_fmt`` is the static
+    paged-cache storage format (see serving/paged_cache.py), threaded down
+    to the block cache read/write paths.
+    """
     x = embed_tokens(params, tokens, cfg, pol)
     s = tokens.shape[1]
     if mode == "decode":
-        positions = jnp.full((s,), cache_index, jnp.int32)
+        ci = jnp.asarray(cache_index, jnp.int32)
+        if ci.ndim == 1:
+            positions = jnp.broadcast_to(ci[:, None], (ci.shape[0], s))
+        else:
+            positions = jnp.full((s,), ci, jnp.int32)
     else:
         positions = jnp.arange(s, dtype=jnp.int32)
 
@@ -130,7 +142,8 @@ def forward(params, tokens, cfg: ArchConfig, pol: Policy, *,
         seg_c = None if caches is None else caches[i]
         x, aux, seg_c_new = _segment_scan(
             btype, params["segments"][i], x, cfg, pol, positions,
-            seg_c, cache_index, mode, seg_name=f"seg{i}:{btype}")
+            seg_c, cache_index, mode, seg_name=f"seg{i}:{btype}",
+            cache_fmt=cache_fmt)
         total_aux = total_aux + aux
         new_caches.append(seg_c_new)
     x = blocks.apply_norm(params["final_norm"], x, cfg)
@@ -158,17 +171,29 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
-def prefill(params, tokens, cfg: ArchConfig, pol: Policy, caches):
-    """Process a full prompt, fill caches, return last-position logits."""
+def prefill(params, tokens, cfg: ArchConfig, pol: Policy, caches, *,
+            last_index=None):
+    """Process a full prompt, fill caches, return last-position logits.
+
+    ``last_index``: optional [B] int32 of each row's true last-token index
+    (right-padded batched admission); default reads position -1.
+    """
     x, _, new_caches = forward(params, tokens, cfg, pol,
                                caches=caches, mode="prefill")
-    logits = lm_head(params, x[:, -1:], cfg, pol)
+    if last_index is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = x[jnp.arange(x.shape[0]), last_index][:, None]
+    logits = lm_head(params, x_last, cfg, pol)
     return logits, new_caches
 
 
-def decode_step(params, token, cfg: ArchConfig, pol: Policy, caches, cache_index):
-    """One decode step.  token: [B, 1] int32; cache_index: traced scalar."""
+def decode_step(params, token, cfg: ArchConfig, pol: Policy, caches,
+                cache_index, *, cache_fmt: Optional[str] = None):
+    """One decode step.  token: [B, 1] int32; cache_index: traced scalar or
+    per-slot [B] position vector (serving)."""
     x, _, new_caches = forward(params, token, cfg, pol, caches=caches,
-                               cache_index=cache_index, mode="decode")
+                               cache_index=cache_index, mode="decode",
+                               cache_fmt=cache_fmt)
     logits = lm_head(params, x, cfg, pol)
     return logits, new_caches

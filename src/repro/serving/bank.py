@@ -1,0 +1,122 @@
+"""Export a frozen serving StatsBank from trained params.
+
+Serving never updates stats: every (alpha, beta) a request sees was fixed
+at export time.  :func:`export_serving_bank` replays the doctor's probe
+machinery (obs/doctor.py) against the *serving* computation graphs —
+prefill and decode, not the train step — so the bank holds exactly the
+sites those graphs mint (including the ``kv_cache`` truncation sites whose
+fwd moments become the paged pool's per-layer (alpha, beta)), warmed on
+representative traffic.  The engine then runs both graphs under
+``statsbank.freeze(bank, ...)``: entries fold into the jitted programs as
+constants and the decode steady state performs **zero** stats reductions
+(asserted on the jaxpr in tests/test_serving.py).
+
+Discovery quirks worth knowing:
+  * prefill and decode mint overlapping-but-different site sets (decode
+    attention runs through einsum sites, prefill through the flash site),
+    so each graph gets its own ``init_bank`` trace and the dicts merge.
+  * the probe losses add a vanishing ``1e-30 * sum(cache**2)`` term: the
+    kv-cache truncations only feed the *cache* outputs, and their refreshed
+    states ride the custom_vjp cotangent — a logits-only loss would let
+    the transpose drop them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import statsbank
+from repro.core.policy import Policy
+from repro.models import transformer as tlm
+
+
+def _cache_term(caches) -> jnp.ndarray:
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(caches):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            total = total + jnp.sum(leaf.astype(jnp.float32) ** 2)
+    return total
+
+
+def export_serving_bank(params, cfg: ArchConfig, policy: Policy, *,
+                        prompt_len: int = 16, batch: int = 2,
+                        passes: int = 2, seed: int = 0,
+                        train_bank: Optional[Dict[str, Any]] = None,
+                        stats_cfg: Optional[statsbank.StatsConfig] = None,
+                        ) -> Dict[str, Any]:
+    """Build and warm the frozen serving bank for ``(params, cfg, policy)``.
+
+    Probes ``passes`` alternating prefill/decode refreshes on synthetic
+    prompts of ``prompt_len`` tokens (stats are scale statistics of the
+    *weights and activations*; random-token traffic is the standard
+    export-calibration stand-in).  ``train_bank`` optionally seeds entries
+    shared with the training graph (e.g. mlp/attn qdot sites) before the
+    probe; serving-only sites (kv_cache, decode einsum) are still warmed
+    here.  Returns the bank dict to pass to the engine and persist next to
+    the checkpoint.
+    """
+    if cfg.enc_dec:
+        raise ValueError("export_serving_bank covers decoder-only LMs")
+    base = stats_cfg or statsbank.StatsConfig()
+    probe_cfg = dataclasses.replace(base, refresh_every=1, ema_decay=0.5)
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab,
+                                jnp.int32)
+
+    def prefill_loss(p, b, pol):
+        logits, new_caches = tlm.prefill(p, b["tokens"], cfg, pol,
+                                         b["caches"])
+        loss = jnp.mean(logits.astype(jnp.float32) ** 2)
+        return loss + 1e-30 * _cache_term(new_caches), {}
+
+    def decode_loss(p, b, pol):
+        logits, new_caches = tlm.decode_step(p, b["token"], cfg, pol,
+                                             b["caches"], b["pos"])
+        loss = jnp.mean(logits.astype(jnp.float32) ** 2)
+        return loss + 1e-30 * _cache_term(new_caches), {}
+
+    max_len = prompt_len + 4
+    fresh = tlm.init_caches(cfg, batch, max_len, dtype=jnp.float32)
+    pre_batch = {"tokens": tokens, "caches": fresh}
+    # Real (sessionless) prefill supplies the decode probe's cache state so
+    # decode stats see realistic magnitudes, not zeros.
+    logits, filled = jax.jit(
+        lambda p, t, c: tlm.prefill(p, t, cfg, policy, c)
+    )(params, tokens, fresh)
+    dec_batch = {
+        "token": jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32),
+        "caches": filled,
+        "pos": jnp.full((batch,), prompt_len, jnp.int32),
+    }
+
+    bank: Dict[str, Any] = {}
+    bank.update(statsbank.init_bank(prefill_loss, params, pre_batch,
+                                    policy, probe_cfg))
+    bank.update(statsbank.init_bank(decode_loss, params, dec_batch,
+                                    policy, probe_cfg))
+
+    if train_bank:
+        for k, v in train_bank.items():
+            if k in bank and jax.tree_util.tree_structure(v) == \
+                    jax.tree_util.tree_structure(bank[k]):
+                bank[k] = v
+
+    def banked(loss_f, b):
+        def run(p, bk):
+            with statsbank.bind(bk, 0, probe_cfg):
+                loss, _ = loss_f(p, b, policy)
+            return loss
+        return run
+
+    for _ in range(max(1, passes)):
+        for loss_f, b in ((prefill_loss, pre_batch),
+                          (decode_loss, dec_batch)):
+            _, (_, updates) = jax.jit(
+                jax.value_and_grad(banked(loss_f, b), argnums=(0, 1))
+            )(params, bank)
+            bank = statsbank.merge_updates(bank, updates)
+    return jax.device_get(bank)

@@ -1,24 +1,48 @@
-"""Batched serving engine: continuous-batching-lite over prefill/decode steps.
+"""Payload-native serving engine: paged S2FP8 KV caches + continuous batching.
 
-The jitted core is two functions per model (prefill, decode_step); the host
-engine multiplexes requests into fixed slot batches (static shapes — XLA
-never recompiles), tracks per-slot cache indices, and swaps finished slots
-for queued requests between decode steps (the continuous-batching pattern,
-sized down: slot admission at step boundaries, no paged attention — the
-ring/window caches in models/blocks.py bound KV memory instead).
+Two engines share the host scheduling machinery:
+
+* :class:`LMServer` — the dense-cache engine (any block pattern, including
+  window rings and ssm states).  Slot-batched continuous batching over one
+  ``[slots, max_len, ...]`` fp32 cache tree.
+* :class:`PayloadLMServer` — the payload engine.  KV lives as S2FP8
+  payloads (1 byte/element + frozen per-layer (alpha, beta)) in a paged
+  block pool (serving/paged_cache.py); stats come from an export-time
+  frozen bank (serving/bank.py) so prefill and decode run **zero** stats
+  reductions; prefill GEMMs/attention route through the payload planner and
+  ``qflash_attention``; decode attention gathers payload blocks through the
+  block table (kernels/paged_attention.py on a Pallas backend, a bitwise-
+  matching jnp gather on the reference backend).
+
+Both engines admit per tick in **batched, bucketed** prefills: every free
+slot is filled from the FCFS queue, admissions are grouped by
+next-power-of-two prompt bucket, and each bucket runs one prefill at a
+fixed batch width — the compiled prefill shape set is bounded by the
+number of buckets (``log2(max_len)``-ish), not the number of requests.
+Decode always runs the full slot batch with a **per-slot position
+vector**: slots at different depths attend to exactly their own prefix (no
+shared-max position, no cross-slot validity bleed).
+
+The payload engine adds a token-budget scheduler: admission stops at a
+per-tick prefill-token cap (padded bucket tokens, the actual FLOP cost),
+and when the block pool runs dry the youngest live slot is preempted
+(blocks released, request requeued at the queue head for a clean restart).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import math
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import statsbank
 from repro.core.policy import Policy
 from repro.models import transformer as tlm
+from repro.serving import paged_cache
 
 
 @dataclasses.dataclass
@@ -28,8 +52,16 @@ class Request:
     out: Optional[List[int]] = None
 
 
+def _bucket(n: int, lo: int = 1, hi: Optional[int] = None) -> int:
+    """Smallest lo * 2**k >= n (capped at hi): the prompt padding bucket."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi) if hi is not None else b
+
+
 class LMServer:
-    """Slot-batched LM serving. All slots share one cache tree."""
+    """Slot-batched LM serving over a dense fp32 cache tree."""
 
     def __init__(self, cfg: ArchConfig, params, policy: Policy,
                  slots: int = 4, max_len: int = 256, eos: int = -1):
@@ -40,9 +72,11 @@ class LMServer:
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_budget = np.zeros(slots, np.int32)
         self.queue: List[Request] = []
+        self.prefill_shapes: set = set()                # compiled (A, P) pairs
 
-        def _prefill(params, tokens, caches):
-            return tlm.prefill(params, tokens, cfg, policy, caches)
+        def _prefill(params, tokens, caches, last_index):
+            return tlm.prefill(params, tokens, cfg, policy, caches,
+                               last_index=last_index)
 
         def _decode(params, token, caches, index):
             return tlm.decode_step(params, token, cfg, policy, caches, index)
@@ -56,25 +90,50 @@ class LMServer:
         req.out = []
         self.queue.append(req)
 
+    @property
+    def max_prefill_shapes(self) -> int:
+        """Upper bound on distinct compiled prefill shapes (bucket count)."""
+        return int(math.log2(self.max_len)) + 1
+
     def _admit(self):
-        """Fill free slots from the queue (prefill runs per-admission with
-        the batch dimension replicated — single-slot prefill keeps this
-        simple; a production variant batches admissions per tick)."""
+        """Fill every free slot from the queue, then run **one prefill per
+        prompt bucket** at batch width = slots: admitted prompts sit in
+        their own slot rows (right-padded to the bucket), logits are read
+        at each row's true last index, and only admitted columns merge back
+        into the shared cache tree."""
+        adm = []
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                prompt = jnp.asarray(req.prompt, jnp.int32)
-                p = jnp.broadcast_to(prompt, (self.slots, prompt.shape[0]))
-                logits, caches = self._prefill(self.params, p, self.caches)
-                # merge only slot s from the prefilled caches
-                self.caches = jax.tree_util.tree_map(
-                    lambda new, old: old.at[:, s].set(new[:, s])
-                    if new.ndim >= 2 else new, caches, self.caches)
+                adm.append((s, self.queue.pop(0)))
+        if not adm:
+            return
+        groups: Dict[int, list] = {}
+        for s, req in adm:
+            assert len(req.prompt) < self.max_len, "prompt exceeds max_len"
+            groups.setdefault(
+                _bucket(len(req.prompt), hi=self.max_len), []).append((s, req))
+        for P, group in sorted(groups.items()):
+            toks = np.zeros((self.slots, P), np.int32)
+            last = np.zeros((self.slots,), np.int32)
+            for s, req in group:
+                toks[s, :len(req.prompt)] = req.prompt
+                last[s] = len(req.prompt) - 1
+            logits, caches = self._prefill(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(last))
+            self.prefill_shapes.add((self.slots, P))
+            assert len(self.prefill_shapes) <= self.max_prefill_shapes
+            cols = np.asarray([s for s, _ in group])
+            self.caches = jax.tree_util.tree_map(
+                lambda new, old: old.at[:, cols].set(new[:, cols])
+                if new.ndim >= 2 else new, caches, self.caches)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+            for s, req in group:
                 self.slot_req[s] = req
                 self.slot_pos[s] = len(req.prompt)
                 self.slot_budget[s] = req.max_new_tokens
-                self._last_token[s, 0] = int(jnp.argmax(logits[s, -1]))
-                req.out.append(int(self._last_token[s, 0]))
+                self._last_token[s, 0] = int(nxt[s])
+                req.out.append(int(nxt[s]))
                 self.slot_budget[s] -= 1
 
     def step(self) -> bool:
@@ -84,12 +143,14 @@ class LMServer:
         live = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not live:
             return False
-        # single shared cache index per decode call requires uniform
-        # positions; we use the max and mask per-slot via cache validity.
-        idx = int(self.slot_pos[live].max()) if live else 0
+        # per-slot position vector: each slot writes and attends at its own
+        # depth (dead slots decode garbage at position 0, discarded here).
+        pos = np.zeros((self.slots,), np.int32)
+        for s in live:
+            pos[s] = self.slot_pos[s]
         tok = jnp.asarray(self._last_token)
         logits, self.caches = self._decode(self.params, tok, self.caches,
-                                           jnp.int32(idx))
+                                           jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
         for s in live:
             req = self.slot_req[s]
@@ -109,4 +170,271 @@ class LMServer:
                 and ticks < max_ticks:
             self.step()
             ticks += 1
+        return ticks
+
+
+class PayloadLMServer:
+    """Paged-payload serving engine (see module docstring).
+
+    ``bank``: exported frozen StatsBank (serving/bank.py); None runs
+    without a frozen session (identity cache stats) — the fp32-baseline
+    configuration for the zero-reduction jaxpr diff.
+    ``cache_fmt``: pool storage format (paged_cache.CACHE_FMTS); "e5m2" /
+    "e4m3" are the payload pools, "f32_e5m2" / "f32_e4m3" the grid-snapped
+    parity comparators, "f32" the raw baseline.
+    ``n_blocks``: pool size incl. the trash block; default sizes for zero
+    memory pressure (slots * max_blocks + 1) — pass less to exercise
+    preemption.
+    ``prefill_token_budget``: per-tick cap on padded prefill tokens.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, policy: Policy, *,
+                 bank: Optional[Dict[str, Any]] = None, slots: int = 8,
+                 max_len: int = 256, block: int = 16,
+                 n_blocks: Optional[int] = None, cache_fmt: str = "e5m2",
+                 eos: int = -1, admit_width: Optional[int] = None,
+                 prefill_token_budget: Optional[int] = None,
+                 stats_cfg: Optional[statsbank.StatsConfig] = None,
+                 sink=None):
+        if max_len % block:
+            raise ValueError(f"max_len {max_len} not a multiple of "
+                             f"block {block}")
+        self.cfg, self.params, self.pol = cfg, params, policy
+        self.slots, self.max_len, self.eos = slots, max_len, eos
+        self.block = block
+        self.max_blocks = max_len // block
+        self.n_blocks = n_blocks or slots * self.max_blocks + 1
+        self.cache_fmt = cache_fmt
+        self.bank = bank
+        self.admit_width = admit_width or min(slots, 8)
+        self.prefill_token_budget = (prefill_token_budget
+                                     or self.admit_width * max_len)
+        self.sink = sink
+        scfg = stats_cfg or statsbank.StatsConfig()
+
+        kv_stats = (paged_cache.kv_stats_from_bank(bank, cfg, cache_fmt)
+                    if bank is not None else None)
+        self.caches = paged_cache.init_paged_caches(
+            cfg, slots=slots, n_blocks=self.n_blocks, block=block,
+            max_blocks=self.max_blocks, cache_fmt=cache_fmt,
+            kv_stats=kv_stats)
+        self.alloc = paged_cache.BlockAllocator(self.n_blocks, slots,
+                                                self.max_blocks)
+
+        self.slot_pos = np.zeros(slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_budget = np.zeros(slots, np.int32)
+        self.slot_seq = np.zeros(slots, np.int64)       # admission order
+        self.queue: List[Request] = []
+        self.prefill_shapes: set = set()
+        self.preemptions = 0
+        self._seq = 0
+        self._tick = 0
+        self._last_token = np.zeros((slots, 1), np.int32)
+
+        use_freeze = bank is not None
+
+        def _prefill_fn(params, tokens, last_index):
+            dense = tlm.init_caches(cfg, tokens.shape[0], tokens.shape[1],
+                                    dtype=jnp.float32)
+            if use_freeze:
+                with statsbank.freeze(bank, scfg):
+                    return tlm.prefill(params, tokens, cfg, policy, dense,
+                                       last_index=last_index)
+            return tlm.prefill(params, tokens, cfg, policy, dense,
+                               last_index=last_index)
+
+        def _pack_fn(caches, dense, bids):
+            return paged_cache.pack_dense_caches(caches, dense, bids,
+                                                 cache_fmt)
+
+        def _decode_fn(params, token, caches, pos):
+            if use_freeze:
+                with statsbank.freeze(bank, scfg):
+                    return tlm.decode_step(params, token, cfg, policy,
+                                           caches, pos, cache_fmt=cache_fmt)
+            return tlm.decode_step(params, token, cfg, policy, caches, pos,
+                                   cache_fmt=cache_fmt)
+
+        self._prefill = jax.jit(_prefill_fn)
+        self._pack = jax.jit(_pack_fn)
+        self._decode = jax.jit(_decode_fn)
+        self._decode_raw = _decode_fn
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    @property
+    def max_prefill_shapes(self) -> int:
+        return int(math.log2(self.max_len)) + 1
+
+    def decode_jaxpr(self):
+        """Jaxpr of one steady-state decode tick — tests assert its stats-
+        reduction count matches an unfrozen fp32 baseline (zero extra)."""
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        return jax.make_jaxpr(self._decode_raw)(self.params, tok,
+                                                self.caches, pos)
+
+    def cache_bytes(self):
+        """(pool_bytes, stats_bytes) of the paged cache."""
+        return paged_cache.cache_payload_bytes(self.caches)
+
+    # ------------------------------------------------------------------
+    def _sync_tables(self):
+        tb = jnp.asarray(self.alloc.table)
+        self.caches = [
+            dict(seg, table=jnp.broadcast_to(
+                tb[None], (seg["table"].shape[0],) + tb.shape))
+            for seg in self.caches]
+
+    def _preempt(self, s: int):
+        """Release slot s and requeue its request (head of queue) for a
+        clean restart."""
+        req = self.slot_req[s]
+        self.alloc.release(s)
+        self.slot_req[s] = None
+        if req is not None:
+            req.out = []
+            self.queue.insert(0, req)
+        self.preemptions += 1
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Youngest live slot other than ``exclude`` (LIFO preemption:
+        oldest admissions keep their progress)."""
+        live = [s for s in range(self.slots)
+                if s != exclude and self.slot_req[s] is not None]
+        return max(live, key=lambda s: self.slot_seq[s]) if live else None
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> int:
+        """Batched, budgeted admission.  FCFS: take queue heads while a
+        slot, the prefill-token budget, and pool blocks all allow; then one
+        prefill + pack per prompt bucket at fixed width ``admit_width``."""
+        free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        picked = []                                  # (slot, req)
+        used = 0
+        while self.queue and free and len(picked) < self.admit_width:
+            req = self.queue[0]
+            plen = len(req.prompt)
+            if plen >= self.max_len:
+                self.queue.pop(0)
+                req.out = []
+                continue                             # drop oversize request
+            P = _bucket(plen, lo=self.block, hi=self.max_len)
+            if picked and used + P > self.prefill_token_budget:
+                break                                # token budget: next tick
+            s = free[0]
+            if not self.alloc.alloc(s, -(-plen // self.block)):
+                break                                # pool dry: wait / preempt
+            free.pop(0)
+            self.queue.pop(0)
+            used += P
+            self._seq += 1
+            self.slot_seq[s] = self._seq
+            picked.append((s, req))
+        if not picked:
+            return 0
+
+        groups: Dict[int, list] = {}
+        for s, req in picked:
+            groups.setdefault(
+                _bucket(len(req.prompt), lo=self.block, hi=self.max_len),
+                []).append((s, req))
+        A = self.admit_width
+        for P, group in sorted(groups.items()):
+            toks = np.zeros((A, P), np.int32)
+            last = np.zeros((A,), np.int32)
+            bids = np.zeros((A, P // self.block), np.int32)  # 0 = trash
+            for r, (s, req) in enumerate(group):
+                plen = len(req.prompt)
+                toks[r, :plen] = req.prompt
+                last[r] = plen - 1
+                nb = -(-plen // self.block)
+                bids[r, :nb] = self.alloc.table[s, :nb]
+            logits, dense = self._prefill(self.params, jnp.asarray(toks),
+                                          jnp.asarray(last))
+            self.prefill_shapes.add((A, P))
+            assert len(self.prefill_shapes) <= self.max_prefill_shapes
+            self.caches = self._pack(self.caches, dense, jnp.asarray(bids))
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+            for r, (s, req) in enumerate(group):
+                self.slot_req[s] = req
+                self.slot_pos[s] = len(req.prompt)
+                self.slot_budget[s] = req.max_new_tokens
+                self._last_token[s, 0] = int(nxt[r])
+                req.out.append(int(nxt[r]))
+                self.slot_budget[s] -= 1
+        return len(picked)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One tick: admit, grow blocks at decode boundaries (preempting
+        the youngest slot when the pool runs dry), one batched decode."""
+        self._tick += 1
+        n_admit = self._admit()
+        preempted_this_tick = 0
+        for s in range(self.slots):
+            if self.slot_req[s] is None:
+                continue
+            need = int(self.slot_pos[s]) // self.block + 1
+            while int(self.alloc.nalloc[s]) < need:
+                if self.alloc.alloc(s, 1):
+                    continue
+                victim = self._pick_victim(exclude=s)
+                if victim is None:
+                    self._preempt(s)                 # nothing else to evict
+                else:
+                    self._preempt(victim)
+                preempted_this_tick += 1
+                if self.slot_req[s] is None:
+                    break
+        live = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not live:
+            self._emit_tick(n_admit, 0, preempted_this_tick)
+            return bool(n_admit or self.queue)
+        self._sync_tables()
+        pos = np.zeros((self.slots,), np.int32)
+        for s in live:
+            pos[s] = self.slot_pos[s]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self._last_token), self.caches,
+            jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+        for s in live:
+            req = self.slot_req[s]
+            req.out.append(int(nxt[s]))
+            self._last_token[s, 0] = nxt[s]
+            self.slot_pos[s] += 1
+            self.slot_budget[s] -= 1
+            done = self.slot_budget[s] <= 0 or nxt[s] == self.eos \
+                or self.slot_pos[s] >= self.max_len - 1
+            if done:
+                self.alloc.release(s)
+                self.slot_req[s] = None
+        self._emit_tick(n_admit, len(live), preempted_this_tick)
+        return True
+
+    def _emit_tick(self, admitted: int, decoded: int, preempted: int):
+        if self.sink is None:
+            return
+        self.sink.emit({
+            "kind": "event", "event": "serving_tick", "tick": self._tick,
+            "admitted": admitted, "decode_tokens": decoded,
+            "preempted": preempted, "preemptions_total": self.preemptions,
+            "live": sum(r is not None for r in self.slot_req),
+            "queue_depth": len(self.queue),
+            "free_blocks": self.alloc.free_blocks,
+        })
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        if self.sink is not None:
+            self.sink.flush()
         return ticks

@@ -1,0 +1,321 @@
+"""Paged S2FP8 KV cache: fixed-size blocks + block table + free-list allocator.
+
+The serving engine (serving/engine.py) stores KV caches as S2FP8 payloads —
+1 byte/element plus one frozen per-layer (alpha, beta) pair per tensor —
+in a block pool instead of dense per-slot ``[slots, max_len, ...]`` arrays.
+HBM then holds ~4x the decode slots (or 4x the context) of an fp32 dense
+cache, and fragmentation is bounded by one partial block per slot.
+
+Layout, per attention segment (leaves stacked over the segment's L layers so
+they ride the model's layer scan ``xs`` like every other cache leaf):
+
+    kp / vp : [L, n_blocks, KV, block, hd]   pool (payload or f32)
+    kab/vab : [L, 2]                          frozen (alpha, beta) per layer
+    table   : [L, slots, max_blocks] int32    block table (same rows every
+                                              layer; duplicated so it scans)
+
+Block 0 is a reserved **trash block**: never allocated, all dead-slot /
+dummy-row writes land there, and every value it could hold is finite (the
+pool is zero-initialized and the encode clamps at the format max), so trash
+reads are always safely masked by the attention validity mask.
+
+``cache_fmt`` (static, threaded through models/transformer.py):
+
+    "e5m2" / "e4m3"         : fp8 payload pool (the serving engine)
+    "f32_e5m2" / "f32_e4m3" : f32 pool holding grid-snapped values — the
+        parity comparator.  Because ``dequantize(quantize(x, s)) ==
+        truncate_value(x, s)`` elementwise (core/s2fp8.py), a payload engine
+        and an f32_* comparator sharing one frozen bank read bit-identical
+        K/V and decode token-identical greedy outputs.
+    "f32"                   : raw f32, no truncation (the fp32 baseline on
+        the same paged structure — used for the zero-reduction jaxpr diff)
+
+All encode/decode math goes through core/s2fp8.py directly (not a backend
+object), so pack-time and decode-time writes are bitwise the same program.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import backend as nbackend
+from repro.core import s2fp8, statsbank
+
+CACHE_FMTS = ("e5m2", "e4m3", "f32_e5m2", "f32_e4m3", "f32")
+
+# Segment block types that use the paged KV layout (global attention only;
+# sliding-window rings and mamba conv/ssm states keep their dense layout).
+PAGED_BLOCK_TYPES = ("dense", "moe", "attn", "dense_first")
+
+
+def base_fmt(cache_fmt: str) -> Optional[str]:
+    """The fp8 grid a cache format snaps to (None for raw f32)."""
+    if cache_fmt == "f32":
+        return None
+    return cache_fmt.split("_")[-1]
+
+
+def is_payload(cache_fmt: str) -> bool:
+    return cache_fmt in ("e5m2", "e4m3")
+
+
+def pool_dtype(cache_fmt: str):
+    if is_payload(cache_fmt):
+        return s2fp8.FMT_QDTYPE[cache_fmt]
+    return jnp.float32
+
+
+def _encode(x: jnp.ndarray, stats, cache_fmt: str) -> jnp.ndarray:
+    """f32 values -> pool storage (payload bytes, or grid-snapped f32)."""
+    fmt = base_fmt(cache_fmt)
+    if fmt is None:
+        return x.astype(jnp.float32)
+    if is_payload(cache_fmt):
+        return s2fp8.quantize(x, stats=stats, fmt=fmt).payload
+    if fmt == "e5m2":
+        return s2fp8.truncate_value(x.astype(jnp.float32), stats=stats)
+    return s2fp8.truncate_value_e4m3(x.astype(jnp.float32), stats=stats)
+
+
+def _decode(g: jnp.ndarray, stats, cache_fmt: str) -> jnp.ndarray:
+    """Pool storage -> f32 values (identity for the f32 pools)."""
+    if not is_payload(cache_fmt):
+        return g
+    t = s2fp8.S2FP8Tensor(payload=g, alpha=stats[0], beta=stats[1],
+                          fmt=base_fmt(cache_fmt))
+    return s2fp8.dequantize(t, jnp.float32)
+
+
+# =========================================================================
+# Cache construction
+# =========================================================================
+
+def identity_stats(n_layers: int) -> jnp.ndarray:
+    """[L, 2] (alpha=1, beta=0) — the f32 / no-bank configuration."""
+    return jnp.tile(jnp.asarray([1.0, 0.0], jnp.float32), (n_layers, 1))
+
+
+def kv_stats_from_bank(bank: Dict[str, Any], cfg: ArchConfig,
+                       cache_fmt: str) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Per-segment (kab, vab) [L, 2] frozen stats from an exported serving
+    bank's ``seg{i}:{btype}/kv_cache/t{0,1}`` sites (t0 = K, t1 = V).
+
+    Uses :func:`statsbank.frozen_stats` — the same derivation the frozen
+    session applies at every other site — so the cache's (alpha, beta) are
+    bit-identical to what an in-model truncation at that site would use.
+    """
+    from repro.models import transformer as tlm
+    fmt = base_fmt(cache_fmt) or "e5m2"
+    out = []
+    for i, (btype, length) in enumerate(tlm.segments_of(cfg)):
+        if btype not in PAGED_BLOCK_TYPES:
+            out.append(None)
+            continue
+        abs_ = []
+        for t in ("t0", "t1"):
+            key = f"seg{i}:{btype}/kv_cache/{t}"
+            if bank is None or key not in bank:
+                abs_.append(identity_stats(length))
+            else:
+                a, b = statsbank.frozen_stats(bank[key]["fwd"], fmt)
+                abs_.append(jnp.stack([a, b], axis=-1))
+        out.append((abs_[0], abs_[1]))
+    return out
+
+
+def init_paged_caches(cfg: ArchConfig, *, slots: int, n_blocks: int,
+                      block: int, max_blocks: int, cache_fmt: str,
+                      kv_stats=None) -> List[Dict[str, jnp.ndarray]]:
+    """Per-segment paged cache pytrees (see module docstring for layout).
+
+    ``kv_stats``: per-segment (kab, vab) [L, 2] from
+    :func:`kv_stats_from_bank`, or None for identity stats.
+    """
+    from repro.models import transformer as tlm
+    assert cache_fmt in CACHE_FMTS, cache_fmt
+    hd = cfg.resolved_head_dim
+    dt = pool_dtype(cache_fmt)
+    caches = []
+    for i, (btype, length) in enumerate(tlm.segments_of(cfg)):
+        if btype not in PAGED_BLOCK_TYPES:
+            raise ValueError(
+                f"paged serving supports global-attention blocks only, got "
+                f"{btype!r} (segment {i}); window rings / ssm states need "
+                f"the dense engine")
+        st = kv_stats[i] if kv_stats is not None else None
+        kab, vab = st if st is not None else (identity_stats(length),
+                                              identity_stats(length))
+        shape = (length, n_blocks, cfg.kv_heads, block, hd)
+        caches.append({
+            "kp": jnp.zeros(shape, dt),
+            "vp": jnp.zeros(shape, dt),
+            "kab": jnp.asarray(kab, jnp.float32),
+            "vab": jnp.asarray(vab, jnp.float32),
+            "table": jnp.zeros((length, slots, max_blocks), jnp.int32),
+        })
+    return caches
+
+
+def cache_payload_bytes(caches) -> Tuple[int, int]:
+    """(pool_bytes, stats_bytes) of a paged cache list — the acceptance
+    check that the payload pools store <= 1 byte/element + stats."""
+    pool = stats = 0
+    for seg in caches:
+        for key in ("kp", "vp"):
+            pool += seg[key].size * seg[key].dtype.itemsize
+        for key in ("kab", "vab"):
+            stats += seg[key].size * 4
+    return pool, stats
+
+
+# =========================================================================
+# Decode-path update + attend (called per layer from models/blocks.py)
+# =========================================================================
+
+def update_and_attend(qg, k, v, cache, cache_index, *, policy,
+                      cache_fmt: str):
+    """Write the new K/V token into the slot's current block, then attend
+    over the slot's gathered blocks.
+
+    qg: [B, KV, G, 1, hd]; k, v: [B, KV, 1, hd]; ``cache`` is one layer's
+    slice {kp, vp, kab, vab, table}; ``cache_index``: [B] per-slot positions
+    (a scalar is broadcast).  B must equal the table's slot count.
+
+    On a Pallas backend with a payload pool the attention runs the
+    block-table gather kernel (kernels/paged_attention.py) — payload blocks
+    dequantize in VMEM and no dense fp32 cache is ever materialized.  The
+    reference path gathers + dequantizes in jnp and reuses
+    ``decode_attention`` so its numerics match the dense comparator
+    bit-for-bit.
+    """
+    assert cache_fmt in CACHE_FMTS, cache_fmt
+    kp, vp, table = cache["kp"], cache["vp"], cache["table"]
+    nb, kvh, blk, hd = kp.shape
+    slots, max_b = table.shape
+    b = qg.shape[0]
+    assert b == slots, (b, slots)
+    kst = (cache["kab"][0], cache["kab"][1])
+    vst = (cache["vab"][0], cache["vab"][1])
+    ci = jnp.asarray(cache_index, jnp.int32)
+    if ci.ndim == 0:
+        ci = jnp.full((b,), ci, jnp.int32)
+
+    bi = jnp.arange(b)
+    bid = table[bi, ci // blk]                       # [B] current block
+    off = ci % blk
+    qk = _encode(k[:, :, 0].astype(jnp.float32), kst, cache_fmt)
+    qv = _encode(v[:, :, 0].astype(jnp.float32), vst, cache_fmt)
+    kp = kp.at[bid, :, off].set(qk.astype(kp.dtype))
+    vp = vp.at[bid, :, off].set(qv.astype(vp.dtype))
+    new_cache = dict(cache, kp=kp, vp=vp)
+
+    use_kernel = (policy is not None and is_payload(cache_fmt)
+                  and isinstance(policy.backend_obj, nbackend.PallasBackend))
+    if use_kernel:
+        from repro.kernels import paged_attention as _pk
+        out = _pk.paged_decode_attention(
+            qg[:, :, :, 0].astype(jnp.float32), kp, vp,
+            kst[0], kst[1], vst[0], vst[1], table, ci,
+            fmt=base_fmt(cache_fmt))
+        return out[:, :, :, None, :].astype(qg.dtype), new_cache
+
+    from repro.models import blocks as _blocks
+
+    def gathered(pool, stats):
+        g = pool[table]                              # [B, max_b, KV, blk, hd]
+        g = jnp.moveaxis(g, 1, 2).reshape(b, kvh, max_b * blk, hd)
+        return _decode(g, stats, cache_fmt)
+
+    kpos = jnp.arange(max_b * blk)
+    valid = kpos[None, :] <= ci[:, None]
+    attn = _blocks.decode_attention(qg, gathered(kp, kst), gathered(vp, vst),
+                                    valid, policy=policy)
+    return attn, new_cache
+
+
+# =========================================================================
+# Prefill pack: dense bucket caches -> pool blocks
+# =========================================================================
+
+def _encode_layers(x, ab, cache_fmt: str):
+    """Per-layer encode: x [L, ...], ab [L, 2] -> pool storage [L, ...]."""
+    if base_fmt(cache_fmt) is None:
+        return x.astype(jnp.float32)
+    return jax.vmap(lambda xl, abl: _encode(xl, (abl[0], abl[1]),
+                                            cache_fmt))(
+        x.astype(jnp.float32), ab)
+
+
+def pack_dense_caches(paged_caches, dense_caches, bids, cache_fmt: str):
+    """Scatter a bucket-width dense prefill cache into the block pools.
+
+    ``dense_caches``: per-segment {"k","v"} [L, A, KV, P, hd] from a
+    prefill at admission width A and bucket length P (P % block == 0).
+    ``bids``: [A, P // block] int32 block ids per admitted row — dummy rows
+    and beyond-prompt blocks point at the trash block 0.  Returns the
+    updated paged cache list (tables unchanged; the host refreshes those).
+    """
+    out = []
+    for seg_p, seg_d in zip(paged_caches, dense_caches):
+        kp = seg_p["kp"]
+        length, nb, kvh, blk, hd = kp.shape
+        a_w, nb_p = bids.shape
+        flat = bids.reshape(-1)                       # [A * nbP]
+        seg = dict(seg_p)
+        for pool_key, dense_key, ab in (("kp", "k", seg_p["kab"]),
+                                        ("vp", "v", seg_p["vab"])):
+            enc = _encode_layers(seg_d[dense_key], ab, cache_fmt)
+            # [L, A, KV, P, hd] -> [L, A * nbP, KV, blk, hd]
+            enc = enc.reshape(length, a_w, kvh, nb_p, blk, hd)
+            enc = enc.transpose(0, 1, 3, 2, 4, 5).reshape(
+                length, a_w * nb_p, kvh, blk, hd)
+            seg[pool_key] = seg_p[pool_key].at[:, flat].set(
+                enc.astype(seg_p[pool_key].dtype))
+        out.append(seg)
+    return out
+
+
+# =========================================================================
+# Host-side free-list block allocator
+# =========================================================================
+
+class BlockAllocator:
+    """Free-list allocator over one pool's blocks (block 0 = trash,
+    never handed out).  Pure host/numpy; the engine mirrors ``table``
+    into each segment's device cache after every change."""
+
+    def __init__(self, n_blocks: int, slots: int, max_blocks: int):
+        self.n_blocks = n_blocks
+        self.max_blocks = max_blocks
+        # LIFO free list; block 0 reserved as trash
+        self.free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self.table = np.zeros((slots, max_blocks), np.int32)
+        self.nalloc = np.zeros((slots,), np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def alloc(self, slot: int, n: int) -> bool:
+        """Append n blocks to ``slot``; False (nothing allocated) on OOB
+        or free-list exhaustion."""
+        have = int(self.nalloc[slot])
+        if n <= 0:
+            return True
+        if have + n > self.max_blocks or n > len(self.free):
+            return False
+        for i in range(n):
+            self.table[slot, have + i] = self.free.pop()
+        self.nalloc[slot] = have + n
+        return True
+
+    def release(self, slot: int):
+        """Return all of ``slot``'s blocks to the free list."""
+        for i in range(int(self.nalloc[slot])):
+            self.free.append(int(self.table[slot, i]))
+        self.table[slot, :] = 0
+        self.nalloc[slot] = 0

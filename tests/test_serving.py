@@ -1,22 +1,48 @@
-"""Serving engine: slot batching, admission, completion, output sanity."""
+"""Serving engines: slot batching, admission, paged payload cache, parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_reduced_config
+from repro.core import statsbank
 from repro.core.policy import make_policy
 from repro.launch import api
-from repro.serving.engine import LMServer, Request
+from repro.serving import bank as sbank
+from repro.serving import paged_cache
+from repro.serving.engine import LMServer, PayloadLMServer, Request
 
 jax.config.update("jax_platform_name", "cpu")
 
 
 @pytest.fixture(scope="module")
-def server():
+def setup():
     cfg = get_reduced_config("minicpm_2b").replace(n_layers=2, remat=False)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def server(setup):
+    cfg, params = setup
     return LMServer(cfg, params, make_policy("fp32"), slots=2, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def payload_setup(setup):
+    """Payload policy + export-time frozen serving bank (shared: the bank
+    depends on (params, cfg, policy), not on the cache format)."""
+    cfg, params = setup
+    pol = make_policy("s2fp8", backend="ref", gemm_mode="payload")
+    bank = sbank.export_serving_bank(params, cfg, pol, prompt_len=8,
+                                     batch=2, passes=1)
+    return cfg, params, pol, bank
+
+
+def _mk_reqs(lengths, vocab, new_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, vocab, int(l), dtype=np.int32),
+                    max_new_tokens=new_tokens) for l in lengths]
 
 
 def test_requests_complete(server):
@@ -56,3 +82,149 @@ def test_greedy_matches_unbatched(server):
         out.append(int(jnp.argmax(logits[0, -1])))
         pos += 1
     assert req.out == out
+
+
+def test_staggered_prompts_match_unbatched(setup):
+    """Regression for the shared-max-position decode bug: slots admitted
+    with different prompt lengths decode at *their own* positions, so each
+    request's greedy output equals a single-slot run of the same prompt."""
+    cfg, params = setup
+    pol = make_policy("fp32")
+    srv = LMServer(cfg, params, pol, slots=3, max_len=64)
+    reqs = _mk_reqs((4, 13, 7), cfg.vocab, 8, seed=2)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_to_completion(max_ticks=100)
+    for r in reqs:
+        ref_srv = LMServer(cfg, params, pol, slots=1, max_len=64)
+        ref = Request(prompt=r.prompt, max_new_tokens=8)
+        ref_srv.submit(ref)
+        ref_srv.run_to_completion(max_ticks=100)
+        assert r.out == ref.out
+
+
+def test_batched_admission_bounded_shapes(setup):
+    """Admissions are bucketed per tick: many requests with assorted prompt
+    lengths compile at most one prefill per power-of-two bucket, not one
+    per admission."""
+    cfg, params = setup
+    srv = LMServer(cfg, params, make_policy("fp32"), slots=4, max_len=64)
+    lengths = (3, 5, 9, 12, 17, 30, 6, 11)
+    reqs = _mk_reqs(lengths, cfg.vocab, 3, seed=3)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_to_completion(max_ticks=200)
+    assert all(len(r.out) == 3 for r in reqs)
+    assert len(srv.prefill_shapes) <= srv.max_prefill_shapes
+    # buckets actually hit: 4, 8, 16, 32 -> far fewer than 8 admissions
+    assert len(srv.prefill_shapes) <= 4
+
+
+@pytest.mark.parametrize("fmt", ["e5m2", "e4m3"])
+def test_payload_engine_token_exact(payload_setup, fmt):
+    """Tentpole numerics: a payload-pool engine and an f32 comparator pool
+    holding ``truncate_value`` grid-snapped values — same frozen bank, same
+    policy — emit token-identical greedy outputs for >= 64 decode steps
+    (dequantize(quantize(x, s)) == truncate_value(x, s) elementwise)."""
+    cfg, params, pol, bank = payload_setup
+    outs = {}
+    for cache_fmt in (fmt, f"f32_{fmt}"):
+        srv = PayloadLMServer(cfg, params, pol, bank=bank, slots=2,
+                              max_len=96, block=8, cache_fmt=cache_fmt)
+        reqs = _mk_reqs((5, 11), cfg.vocab, 64, seed=4)
+        for r in reqs:
+            srv.submit(r)
+        srv.run_to_completion(max_ticks=200)
+        assert all(len(r.out) == 64 for r in reqs)
+        outs[cache_fmt] = [r.out for r in reqs]
+    assert outs[fmt] == outs[f"f32_{fmt}"]
+
+
+def test_payload_pool_is_one_byte(payload_setup):
+    """Acceptance: the paged payload cache stores 1 byte/element + frozen
+    per-layer stats scalars."""
+    cfg, params, pol, bank = payload_setup
+    srv = PayloadLMServer(cfg, params, pol, bank=bank, slots=2, max_len=32,
+                          block=8, cache_fmt="e5m2")
+    for seg in srv.caches:
+        assert seg["kp"].dtype.itemsize == 1
+        assert seg["vp"].dtype.itemsize == 1
+    pool_b, stats_b = srv.cache_bytes()
+    n_elts = sum(seg["kp"].size + seg["vp"].size for seg in srv.caches)
+    assert pool_b == n_elts
+    assert stats_b == sum(seg["kab"].size + seg["vab"].size
+                          for seg in srv.caches) * 4
+
+
+def test_decode_zero_stats_reductions(payload_setup):
+    """Acceptance: frozen-bank payload decode performs exactly as many
+    reductions as an unfrozen fp32 engine on the same paged structure —
+    i.e. zero stats reductions in the steady state."""
+    cfg, params, pol, bank = payload_setup
+    frozen = PayloadLMServer(cfg, params, pol, bank=bank, slots=2,
+                             max_len=32, block=8, cache_fmt="e5m2")
+    base = PayloadLMServer(cfg, params, make_policy("fp32"), bank=None,
+                           slots=2, max_len=32, block=8, cache_fmt="f32")
+    nf = statsbank.count_reductions(frozen.decode_jaxpr())
+    nb = statsbank.count_reductions(base.decode_jaxpr())
+    assert nf == nb, (nf, nb)
+
+
+def test_preemption_under_pool_pressure(payload_setup):
+    """With a pool too small for all contexts, the engine preempts the
+    youngest slot (requeue + restart) and still completes every request."""
+    cfg, params, pol, bank = payload_setup
+    srv = PayloadLMServer(cfg, params, pol, bank=bank, slots=2, max_len=32,
+                          block=8, n_blocks=5, cache_fmt="e5m2")
+    reqs = _mk_reqs((9, 9, 9), cfg.vocab, 20, seed=5)
+    for r in reqs:
+        srv.submit(r)
+    ticks = srv.run_to_completion(max_ticks=500)
+    assert ticks < 500
+    assert srv.preemptions > 0
+    assert all(len(r.out) == 20 for r in reqs)
+
+
+def test_prefill_token_budget_defers_admission(payload_setup):
+    """The scheduler admits at most ``prefill_token_budget`` padded prompt
+    tokens per tick; excess requests wait in the queue."""
+    cfg, params, pol, bank = payload_setup
+    srv = PayloadLMServer(cfg, params, pol, bank=bank, slots=4, max_len=32,
+                          block=8, cache_fmt="e5m2",
+                          prefill_token_budget=16)
+    reqs = _mk_reqs((9, 9, 9, 9), cfg.vocab, 4, seed=6)
+    for r in reqs:
+        srv.submit(r)
+    # 9 -> bucket 16; budget 16 admits exactly one per tick
+    srv.step()
+    assert sum(r is not None for r in srv.slot_req) == 1
+    assert len(srv.queue) == 3
+    srv.run_to_completion(max_ticks=100)
+    assert all(len(r.out) == 4 for r in reqs)
+
+
+def test_paged_kernel_matches_reference():
+    """Interpret-mode Pallas paged decode kernel vs the jnp gather oracle."""
+    from repro.kernels import paged_attention as pk
+    from repro.core import s2fp8
+    key = jax.random.PRNGKey(7)
+    b, kvh, g, hd, blk, max_b, nb = 4, 2, 3, 64, 16, 4, 9
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, kvh, g, hd), jnp.float32)
+    kf = jax.random.normal(ks[1], (nb, kvh, blk, hd), jnp.float32)
+    vf = jax.random.normal(ks[2], (nb, kvh, blk, hd), jnp.float32)
+    ka, kb_ = 4.0, 1.5
+    va, vb_ = 3.0, -0.5
+    kp = s2fp8.quantize(kf, stats=(ka, kb_), fmt="e5m2").payload
+    vp = s2fp8.quantize(vf, stats=(va, vb_), fmt="e5m2").payload
+    table = jnp.asarray(
+        np.array([[1, 2, 3, 4], [5, 6, 0, 0], [0, 0, 0, 0], [7, 8, 1, 2]],
+                 np.int32))
+    positions = jnp.asarray([5, 33, 0, 60], jnp.int32)
+    out = pk.paged_decode_attention(q, kp, vp, ka, kb_, va, vb_, table,
+                                    positions, fmt="e5m2", interpret=True)
+    ref = pk.paged_decode_reference(q, kp, vp, ka, kb_, va, vb_, table,
+                                    positions)
+    assert jnp.isfinite(out).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
